@@ -1,0 +1,47 @@
+"""Fig 6: model dissemination / gradient aggregation time vs #nodes
+(exponential sweep) and vs tree fanout (b = 3, 4, 5)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import build_system, row, timeit
+
+
+def run() -> list[str]:
+    out = []
+    # (a, b): time vs exponentially growing node count — expect ~linear
+    # (depth = O(log N)); we report modeled tree latency + measured hops
+    for n in (20, 80, 320, 1280, 5120):
+        sys_, nodes, rng = build_system(n_nodes=max(n, 64), zones=4, seed=1)
+        h = sys_.CreateTree(f"bench-{n}")
+        for w in rng.choice(nodes, size=min(n, len(nodes)), replace=False):
+            sys_.Subscribe(h.app_id, int(w))
+        tree = h.tree
+        bt = tree.broadcast_time(sys_.overlay)
+        at = tree.aggregation_time(sys_.overlay)
+        out.append(
+            row(
+                f"fig6ab_tree_n{n}",
+                0.0,
+                f"depth={tree.depth()};broadcast_ms={bt:.2f};aggregate_ms={at:.2f}",
+            )
+        )
+
+    # (c, d): fanout sweep (ResNet-34-sized payload, 85 MB)
+    for b in (3, 4, 5):
+        sys_, nodes, rng = build_system(n_nodes=2000, zones=1, seed=2, base_bits=b)
+        h = sys_.CreateTree(f"fan-{b}")
+        for w in rng.choice(nodes, size=1500, replace=False):
+            sys_.Subscribe(h.app_id, int(w))
+        tree = h.tree
+        # payload time per edge: 85MB over per-node bandwidth ~60 Mbps
+        payload_ms = 85e6 * 8 / (60e6) * 1e3 / 1000
+        bt = tree.broadcast_time(sys_.overlay, payload_ms=payload_ms)
+        out.append(
+            row(
+                f"fig6cd_fanout_b{b}",
+                0.0,
+                f"fanout={tree.fanout()};depth={tree.depth()};broadcast_ms={bt:.1f}",
+            )
+        )
+    return out

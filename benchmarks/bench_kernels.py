@@ -1,0 +1,56 @@
+"""Kernel microbenches (interpret mode on CPU; TPU is the target) +
+roofline terms per kernel from analytic bytes/flops."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import row, timeit
+
+
+def run() -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    out = []
+    key = jax.random.key(0)
+
+    C, L = 16, 1 << 17
+    g = jax.random.normal(key, (C, L), jnp.bfloat16)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    t, _ = timeit(lambda: jax.block_until_ready(ops.tree_aggregate(g, w)))
+    bytes_moved = C * L * 2 + L * 4
+    out.append(
+        row(
+            "kernel_tree_aggregate",
+            t * 1e6,
+            f"C={C};L={L};GBps={bytes_moved/t/1e9:.2f}(interpret)",
+        )
+    )
+
+    R = 4096
+    x = jax.random.normal(jax.random.fold_in(key, 2), (R, 256))
+    rnd = jax.random.uniform(jax.random.fold_in(key, 3), (R, 256))
+    t, _ = timeit(lambda: jax.block_until_ready(ops.qsgd_quantize(x, rnd)))
+    out.append(row("kernel_qsgd_quantize", t * 1e6, f"R={R};ratio=3.94x"))
+
+    N, K, tau = 4096, 16, 8
+    pi = jax.random.dirichlet(jax.random.fold_in(key, 4), jnp.ones(K), (N,)).astype(jnp.float32)
+    rsum = jax.random.uniform(jax.random.fold_in(key, 5), (N, K))
+    from repro.core.pathplan import candidate_policy_set
+
+    cand = candidate_policy_set(K)
+    t, _ = timeit(
+        lambda: jax.block_until_ready(
+            ops.policy_update(pi, jnp.ones((N, K), bool), cand, rsum, tau=tau, alpha=0.9, beta=0.5)
+        )
+    )
+    out.append(row("kernel_policy_update", t * 1e6, f"N={N};K={K}"))
+
+    L2 = 1 << 17
+    wv = jax.random.normal(jax.random.fold_in(key, 6), (L2,), jnp.bfloat16)
+    gv = jax.random.normal(jax.random.fold_in(key, 7), (L2,), jnp.bfloat16)
+    t, _ = timeit(lambda: jax.block_until_ready(ops.fused_update(wv, gv, wv, lr=0.1, mu=0.01, wd=0.0)))
+    out.append(row("kernel_fused_update", t * 1e6, f"L={L2}"))
+    return out

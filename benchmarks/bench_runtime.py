@@ -1,0 +1,77 @@
+"""Figs 15-16: Algorithm-1 runtime vs node count + per-line breakdown.
+
+The paper's claim: Totoro+'s update is parallel matrix algebra (~50 ms,
+flat in N) vs Totoro's per-node convex solves (grows to ~1.5 s).  We
+measure the batched JAX update and the Pallas kernel (interpret mode),
+plus a per-line cost breakdown mirroring Fig 16.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import row, timeit
+
+
+def run() -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pathplan import algorithm1_episode, candidate_policy_set
+    from repro.kernels import ops as kops
+
+    out = []
+    K, tau = 16, 8
+    cand = candidate_policy_set(K)
+    for N in (100, 1000, 10000):
+        key = jax.random.key(N)
+        pi = jax.random.dirichlet(key, jnp.ones(K), (N,)).astype(jnp.float32)
+        mask = jnp.ones((N, K), bool)
+        actions = jax.random.randint(jax.random.fold_in(key, 1), (N, tau), 0, K)
+        rewards = jax.random.uniform(jax.random.fold_in(key, 2), (N, tau))
+
+        t, _ = timeit(
+            lambda: jax.block_until_ready(
+                algorithm1_episode(pi, mask, cand, actions, rewards, tau=tau, alpha=0.9, beta=0.5)
+            )
+        )
+        out.append(row(f"fig15_alg1_jax_n{N}", t * 1e6, f"ms_total={t*1e3:.2f}"))
+
+        rsums = (jax.nn.one_hot(actions, K) * rewards[..., None]).sum(1)
+        t2, _ = timeit(
+            lambda: jax.block_until_ready(
+                kops.policy_update(pi, mask, cand, rsums, tau=tau, alpha=0.9, beta=0.5)
+            )
+        )
+        out.append(row(f"fig15_alg1_pallas_n{N}", t2 * 1e6, f"ms_total={t2*1e3:.2f}"))
+
+    # Fig 16: line breakdown (jitted pieces timed separately)
+    N = 10000
+    key = jax.random.key(0)
+    pi = jax.random.dirichlet(key, jnp.ones(K), (N,)).astype(jnp.float32)
+    maskf = jnp.ones((N, K), jnp.float32)
+    actions = jax.random.randint(jax.random.fold_in(key, 1), (N, tau), 0, K)
+    rewards = jax.random.uniform(jax.random.fold_in(key, 2), (N, tau))
+
+    candn = jax.jit(lambda m: cand[None] * m[:, None, :] / jnp.maximum((cand[None] * m[:, None, :]).sum(-1, keepdims=True), 1e-12))
+    line5 = jax.jit(lambda c: jnp.argmin(jnp.log(jnp.maximum(c, 1e-12)).sum(-1), axis=1))
+    line6 = jax.jit(lambda a, r, p: (jax.nn.one_hot(a, K) * r[..., None]).sum(1) / (tau * jnp.maximum(p, 1e-12)))
+    line7 = jax.jit(lambda c, g: jnp.argmax(jnp.einsum("nmk,nk->nm", c, g), axis=1))
+    line8 = jax.jit(lambda p, pt, rh: 0.9 * (p + 0.5 * (pt - p)) + 0.1 * rh)
+
+    c = candn(maskf)
+    g = line6(actions, rewards, pi)
+    i5 = line5(c)
+    i7 = line7(c, g)
+    rho = c[jnp.arange(N), i5]
+    pit = c[jnp.arange(N), i7]
+    for name, fn in (
+        ("line5_min_det", lambda: jax.block_until_ready(line5(c))),
+        ("line6_grad_est", lambda: jax.block_until_ready(line6(actions, rewards, pi))),
+        ("line7_argmax", lambda: jax.block_until_ready(line7(c, g))),
+        ("line8_frank_wolfe", lambda: jax.block_until_ready(line8(pi, pit, rho))),
+    ):
+        t, _ = timeit(fn)
+        out.append(row(f"fig16_{name}", t * 1e6, f"n={N}"))
+    return out

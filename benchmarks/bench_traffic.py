@@ -1,0 +1,45 @@
+"""Fig 7: per-node traffic cost vs number of dataflow trees (expect
+sublinear growth: ~1.2-1.3x traffic for 10x trees)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import build_system, row
+
+
+def run() -> list[str]:
+    out = []
+    sys_, nodes, rng = build_system(n_nodes=1500, zones=4, seed=3)
+    payload = np.ones(1024, np.float32)  # fixed control-plane payload
+    prev = None
+    for n_trees in (5, 50):
+        # overlay maintenance traffic: keep-alives ~ O(N); per-tree JOINs
+        join_edges = 0
+        for i in range(n_trees):
+            h = sys_.CreateTree(f"t{n_trees}-{i}")
+            subs = rng.choice(nodes, size=100, replace=False)
+            for w in subs:
+                sys_.Subscribe(h.app_id, int(w))
+            join_edges += len(h.tree.parent)
+            sys_.Broadcast(h.app_id, payload)
+        total_traffic = sum(h.traffic_bytes for h in sys_.apps.values())
+        per_node = total_traffic / len(nodes)
+        out.append(
+            row(
+                f"fig7_traffic_trees{n_trees}",
+                0.0,
+                f"per_node_bytes={per_node:.0f};join_edges={join_edges}",
+            )
+        )
+        if prev is not None:
+            out.append(
+                row(
+                    "fig7_traffic_ratio_10x_trees",
+                    0.0,
+                    f"ratio={per_node/prev:.2f}x_for_10x_trees",
+                )
+            )
+        prev = per_node
+        for h in list(sys_.apps.values()):
+            h.traffic_bytes = 0.0
+    return out

@@ -1,0 +1,49 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+
+def build_system(n_nodes=2000, zones=8, seed=0, base_bits=4, suffix_bits=24):
+    from repro.core.api import TotoroSystem
+
+    sys_ = TotoroSystem(
+        zone_bits=int(math.log2(zones)), suffix_bits=suffix_bits,
+        base_bits=base_bits, seed=seed,
+    )
+    rng = np.random.default_rng(seed)
+    nodes = [
+        sys_.Join("n", i, site=int(rng.integers(0, zones)), coord=rng.uniform(0, 100, 2),
+                  bandwidth=float(rng.uniform(20, 100)))
+        for i in range(n_nodes)
+    ]
+    return sys_, nodes, rng
+
+
+def eua_like_coords(n: int, seed: int = 0) -> np.ndarray:
+    """EUA-style clustered geography: population-weighted city clusters
+    (stand-in for the 95,271-station Australian dataset)."""
+    rng = np.random.default_rng(seed)
+    # 12 'states' with skewed populations like the EUA split
+    weights = np.array([24574, 21576, 18163, 15933, 7682, 3213, 3137, 931, 36, 15, 8, 3], float)
+    weights /= weights.sum()
+    centers = rng.uniform(0, 1000, (12, 2))
+    which = rng.choice(12, size=n, p=weights)
+    return centers[which] + rng.normal(0, 15, (n, 2))
+
+
+def timeit(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

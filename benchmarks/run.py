@@ -1,0 +1,51 @@
+# One function per paper table/figure. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_adaptivity,
+        bench_hops,
+        bench_kernels,
+        bench_overhead,
+        bench_recovery,
+        bench_scalability,
+        bench_time_to_accuracy,
+        bench_traffic,
+        bench_runtime,
+    )
+
+    modules = [
+        ("scalability(Fig5)", bench_scalability),
+        ("hops(Fig6)", bench_hops),
+        ("traffic(Fig7)", bench_traffic),
+        ("time_to_accuracy(TabIII/Fig8-9)", bench_time_to_accuracy),
+        ("adaptivity(Fig11-14)", bench_adaptivity),
+        ("runtime(Fig15-16)", bench_runtime),
+        ("recovery(Fig17-18)", bench_recovery),
+        ("overhead(Fig19)", bench_overhead),
+        ("kernels", bench_kernels),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in modules:
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{label},NaN,FAILED", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Game-theoretic path planning demo (paper §V + Figs 11-16).
+
+Reproduces the Appendix-E numerical example exactly, then runs Totoro+
+vs the EuroSys'24 bandit vs OPT on a constrained-bandwidth hop set and
+prints the Nash-regret / latency comparison.
+
+  PYTHONPATH=src python examples/path_planning_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.congestion import CongestionEnv, make_env
+from repro.core.pathplan import (
+    BanditPlanner, GameTheoreticPlanner, OptPlanner,
+    algorithm1_episode, run_planner,
+)
+
+# --- Appendix E, bit-exact -------------------------------------------------
+cand = jnp.array([[0.6, 0.4], [0.5, 0.5], [0.3, 0.7], [0.1, 0.9]], jnp.float32)
+out = algorithm1_episode(
+    jnp.array([[0.5, 0.5]], jnp.float32), jnp.ones((1, 2), bool), cand,
+    jnp.array([[0, 1]]), jnp.array([[0.4, 0.8]], jnp.float32),
+    tau=2, alpha=0.5, beta=0.5,
+)
+print(f"Appendix E: pi^2 = {np.asarray(out[0]).round(4)}  (paper: [0.2, 0.8])")
+
+# --- Totoro+ vs bandit vs OPT on 20-100 Mbps shared hops --------------------
+env = make_env(8, seed=7, bw_range=(20.0, 100.0))
+env = CongestionEnv(capacity=env.capacity, theta=env.theta, packet_mbit=2.0)
+N, episodes = 128, 40
+print(f"\n{N} nodes x 8 hops, {episodes} episodes x tau=16 packets:")
+print(f"{'planner':16} {'cum_latency_s':>14} {'nash_regret':>12} {'reward':>8}")
+for name, planner in (
+    ("Totoro+ (Alg.1)", GameTheoreticPlanner(N, 8, tau=16, alpha=0.98, beta=0.5, seed=0)),
+    ("Totoro (bandit)", BanditPlanner(N, 8, tau=16)),
+    ("OPT (oracle)", OptPlanner(env, N, tau=16)),
+):
+    s = run_planner(planner, env, episodes)
+    print(
+        f"{name:16} {s['cum_latency_ms'][-1]/1e3:14.1f} "
+        f"{np.mean(s['nash_regret'][-8:]):12.4f} "
+        f"{np.mean(s['mean_reward'][-8:]):8.3f}"
+    )
+print("\nTotoro+ spreads traffic over contended hops (epsilon-approximate "
+      "Nash equilibrium, Corollary 1); the congestion-blind bandit herds "
+      "onto 'best' hops and pays the queueing penalty.")

@@ -1,0 +1,33 @@
+"""Hillclimb driver: run one cell with overrides, print roofline delta."""
+import json, subprocess, sys, os
+
+def run(tag, arch, shape, mp=False, agg=None, overrides=None, accum=None):
+    code = (
+        "import json\n"
+        "from repro.launch.dryrun import run_cell\n"
+        f"r = run_cell({arch!r}, {shape!r}, multi_pod={mp}, aggregation={agg!r}, quiet=True,\n"
+        f"             cfg_overrides={overrides!r}, grad_accum={accum!r})\n"
+        "print('RESULT_JSON:' + json.dumps(r))\n"
+    )
+    env = dict(os.environ); env["PYTHONPATH"] = "src"
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=3000)
+    rec = None
+    for line in p.stdout.splitlines():
+        if line.startswith("RESULT_JSON:"):
+            rec = json.loads(line[len("RESULT_JSON:"):])
+    if rec is None:
+        print(f"{tag}: FAILED\n{p.stderr[-1500:]}"); return None
+    rl, c, m = rec["roofline"], rec["cost"], rec["memory"]
+    print(f"{tag}: compute={rl['compute_s']:.2f}s memory={rl['memory_s']:.2f}s "
+          f"coll={rl['collective_s']:.2f}s bound={rl['bound']} ratio={rl['useful_flops_ratio']:.3f} "
+          f"peak={m['peak_bytes_per_dev']/1e9:.1f}GB coll_bytes={rec['collectives']['total_bytes_per_dev']/1e9:.0f}GB")
+    with open("results/hillclimb.jsonl", "a") as f:
+        rec["tag"] = tag
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+if __name__ == "__main__":
+    import importlib
+    steps = json.loads(sys.argv[1])
+    for s in steps:
+        run(**s)

@@ -1,0 +1,2 @@
+"""Totoro+ core: locality-aware P2P multi-ring, pub/sub forest,
+game-theoretic path planning, failure recovery, high-level API."""

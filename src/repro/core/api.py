@@ -1,0 +1,159 @@
+"""Layer 3: the Totoro+ high-level API (paper Table II).
+
+``TotoroSystem`` wires the multi-ring overlay, the pub/sub forest, the
+game-theoretic planner and failure recovery behind the paper's verbs:
+Join / CreateTree / Subscribe / Unsubscribe / Broadcast / Aggregate +
+onBroadcast / onAggregate / onTimer callbacks.  Application-level
+customization hooks: selection_fn (client admission on JOIN),
+compress_fn / decompress_fn (Broadcast/Aggregate payloads, e.g. QSGD),
+aggregate_fn (FedAvg/FedProx/...), privacy_fn (e.g. DP noise).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from . import recovery as recovery_mod
+from .forest import DataflowTree, Forest
+from .nodeid import IdSpace
+from .overlay import MultiRingOverlay
+
+
+@dataclass
+class AppHandle:
+    app_id: int
+    name: str
+    tree: DataflowTree
+    selection_fn: Callable[[int], bool] | None = None
+    compress_fn: Callable | None = None
+    decompress_fn: Callable | None = None
+    aggregate_fn: Callable | None = None
+    privacy_fn: Callable | None = None
+    on_broadcast: Callable | None = None
+    on_aggregate: Callable | None = None
+    on_timer: Callable | None = None
+    round_num: int = 0
+    traffic_bytes: float = 0.0
+
+
+class TotoroSystem:
+    def __init__(
+        self,
+        *,
+        zone_bits: int = 4,
+        suffix_bits: int = 32,
+        base_bits: int = 4,
+        replicas: int = 2,
+        seed: int = 0,
+    ):
+        self.space = IdSpace(zone_bits, suffix_bits)
+        self.overlay = MultiRingOverlay(self.space, base_bits=base_bits, seed=seed)
+        self.forest = Forest(self.overlay)
+        self.replicas = recovery_mod.ReplicaStore(k=replicas)
+        self.apps: dict[int, AppHandle] = {}
+
+    # -- Table II verbs -------------------------------------------------------
+
+    def Join(self, ip: str, port: int, site: int, *, coord=(0.0, 0.0), bandwidth=100.0) -> int:
+        """Edge node joins the DHT-based P2P overlay network."""
+        del ip, port  # transport is simulated; identity = NodeId
+        return self.overlay.join_random(site % self.space.num_zones, coord, bandwidth)
+
+    def CreateTree(self, app_name: str, *, restrict_zone=None, fanout_bits=None, **hooks) -> AppHandle:
+        """Application owner creates a dataflow tree (+ configures hooks)."""
+        if fanout_bits is not None:
+            self.overlay.b = fanout_bits
+        tree = self.forest.create_tree(app_name, restrict_zone=restrict_zone)
+        h = AppHandle(app_id=tree.app_id, name=app_name, tree=tree, **hooks)
+        self.apps[tree.app_id] = h
+        return h
+
+    def Subscribe(self, app_id: int, node: int) -> bool:
+        """JOIN a dataflow tree; the owner's selection_fn can reject."""
+        h = self.apps[app_id]
+        if h.selection_fn is not None and not h.selection_fn(node):
+            return False
+        self.forest.subscribe(app_id, node)
+        return True
+
+    def Unsubscribe(self, app_id: int, node: int) -> None:
+        self.forest.unsubscribe(app_id, node)
+
+    def Broadcast(self, app_id: int, obj: Any) -> dict:
+        """Master disseminates a model (or AppIds) down the tree."""
+        h = self.apps[app_id]
+        payload = h.compress_fn(obj) if h.compress_fn else obj
+        nbytes = _nbytes(payload)
+        tree = h.tree
+        n_edges = len(tree.parent)
+        h.traffic_bytes += nbytes * n_edges
+        time_ms = tree.broadcast_time(self.overlay, payload_ms=0.0)
+        if h.on_broadcast:
+            received = h.decompress_fn(payload) if h.decompress_fn else payload
+            for w in sorted(tree.members):
+                h.on_broadcast(app_id, received)
+        return {"time_ms": time_ms, "bytes": nbytes * n_edges, "edges": n_edges}
+
+    def Aggregate(self, app_id: int, objects: dict[int, Any], weights=None) -> dict:
+        """Aggregate worker updates up the tree (level-by-level)."""
+        h = self.apps[app_id]
+        tree = h.tree
+        agg_fn = h.aggregate_fn or _weighted_mean
+        weights = weights or {n: 1.0 for n in objects}
+        payload = objects
+        if h.privacy_fn:
+            payload = {n: h.privacy_fn(v) for n, v in payload.items()}
+        result = agg_fn(list(payload.values()), [weights[n] for n in payload])
+        nbytes = sum(_nbytes(v) for v in payload.values())
+        h.traffic_bytes += nbytes
+        time_ms = tree.aggregation_time(self.overlay)
+        if h.on_aggregate:
+            h.on_aggregate(app_id, result)
+        return {"time_ms": time_ms, "bytes": nbytes, "result": result}
+
+    def Discover(self, node: int) -> dict[int, dict]:
+        """AD-tree application discovery (journal addition, Appendix A)."""
+        return self.forest.discover(node)
+
+    def tick(self) -> None:
+        """Periodic timer: fires owners' onTimer callbacks."""
+        for h in self.apps.values():
+            if h.on_timer:
+                h.on_timer(h.app_id)
+
+    # -- fault tolerance -------------------------------------------------------
+
+    def replicate_master_state(self, app_id: int, state) -> list[int]:
+        h = self.apps[app_id]
+        return self.replicas.replicate(self.overlay, app_id, h.tree.root, state)
+
+    def fail_nodes(self, app_id: int, nodes: list[int]):
+        h = self.apps[app_id]
+        return recovery_mod.fail_and_recover(
+            self.overlay, self.forest, h.tree, nodes, replicas=self.replicas
+        )
+
+
+def _nbytes(obj) -> float:
+    import jax
+
+    if hasattr(obj, "nbytes"):
+        return float(obj.nbytes)
+    try:
+        return float(sum(np.asarray(x).nbytes for x in jax.tree.leaves(obj)))
+    except Exception:
+        return float(len(str(obj)))
+
+
+def _weighted_mean(values, weights):
+    import jax
+
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        return sum(wi * np.asarray(l, np.float64) for wi, l in zip(w, leaves))
+
+    return jax.tree.map(avg, *values)

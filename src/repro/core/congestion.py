@@ -1,0 +1,62 @@
+"""Congestion-game environment (paper §V-A, Appendix C).
+
+Facilities = next-hop nodes with bandwidth capacities.  When k nodes pick
+the same hop, its rate drops to capacity/k (the paper's bandwidth-sharing
+model, §VII-E): latency = packet_bits / (capacity/k) + propagation;
+reward = 1 - latency / l_max in [0, 1] (Appendix G), times a Bernoulli
+link-success draw with mean theta_p.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["capacity", "theta"],
+    meta_fields=["packet_mbit", "base_ms", "l_max_ms"],
+)
+@dataclass(frozen=True)
+class CongestionEnv:
+    capacity: jax.Array  # (P,) Mbps per hop
+    theta: jax.Array  # (P,) link success rate
+    packet_mbit: float = 8.0
+    base_ms: float = 5.0
+    l_max_ms: float = 2000.0
+
+    @property
+    def num_paths(self) -> int:
+        return int(self.capacity.shape[0])
+
+    def latency_ms(self, actions: jax.Array) -> jax.Array:
+        """actions: (N,) hop index per node -> per-node latency (ms)."""
+        P = self.num_paths
+        counts = jnp.zeros(P, jnp.float32).at[actions].add(1.0)
+        n_p = counts[actions]  # congestion each node sees
+        rate = self.capacity[actions] / jnp.maximum(n_p, 1.0)  # Mbps
+        return self.base_ms + 1e3 * self.packet_mbit / jnp.maximum(rate, 1e-6)
+
+    def rewards(self, actions: jax.Array, key) -> jax.Array:
+        lat = self.latency_ms(actions)
+        r = jnp.clip(1.0 - lat / self.l_max_ms, 0.0, 1.0)
+        ok = jax.random.bernoulli(key, self.theta[actions])
+        return r * ok
+
+    def mean_reward(self, path: int, k: int) -> float:
+        """r^p(k, theta_p): closed-form mean reward with k users on path."""
+        rate = float(self.capacity[path]) / max(k, 1)
+        lat = self.base_ms + 1e3 * self.packet_mbit / rate
+        return float(np.clip(1.0 - lat / self.l_max_ms, 0.0, 1.0) * self.theta[path])
+
+
+def make_env(num_paths: int, *, seed: int = 0, bw_range=(20.0, 100.0), theta_range=(0.9, 1.0)) -> CongestionEnv:
+    rng = np.random.default_rng(seed)
+    return CongestionEnv(
+        capacity=jnp.asarray(rng.uniform(*bw_range, size=num_paths), jnp.float32),
+        theta=jnp.asarray(rng.uniform(*theta_range, size=num_paths), jnp.float32),
+    )

@@ -1,0 +1,182 @@
+"""Layer 2: publish/subscribe forest abstraction (paper §IV-C).
+
+Each FL application gets a dataflow tree built from the union of JOIN
+message routes toward AppId; the rendezvous node (numerically closest to
+AppId) is the root = master; internal nodes keep children tables and act
+as coordinator/aggregator/selector; leaves are workers.  The masters of
+all trees join a shared advertise-discover (AD) tree keyed by
+``hash("AD application")`` that carries the application registry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .nodeid import numerically_closest, sha1_id
+from .overlay import MultiRingOverlay, RouteResult
+
+AD_TOPIC = "AD application"
+
+
+@dataclass
+class DataflowTree:
+    app_id: int
+    root: int
+    parent: dict[int, int] = field(default_factory=dict)  # node -> parent
+    children: dict[int, list[int]] = field(default_factory=dict)  # children table
+    members: set[int] = field(default_factory=set)  # subscribers (workers)
+    meta: dict = field(default_factory=dict)
+
+    def nodes(self) -> set[int]:
+        return {self.root} | set(self.parent)
+
+    def depth_of(self, node: int) -> int:
+        d, cur = 0, node
+        while cur != self.root:
+            cur = self.parent[cur]
+            d += 1
+            if d > len(self.parent) + 1:
+                raise RuntimeError("cycle in tree")
+        return d
+
+    def depth(self) -> int:
+        return max((self.depth_of(n) for n in self.nodes()), default=0)
+
+    def levels(self) -> list[list[int]]:
+        by_depth: dict[int, list[int]] = {}
+        for n in self.nodes():
+            by_depth.setdefault(self.depth_of(n), []).append(n)
+        return [by_depth[d] for d in sorted(by_depth)]
+
+    def fanout(self) -> int:
+        return max((len(c) for c in self.children.values()), default=0)
+
+    def path_to_root(self, node: int) -> list[int]:
+        out = [node]
+        while out[-1] != self.root:
+            out.append(self.parent[out[-1]])
+        return out
+
+    # -- dataflow schedules (latency model supplied by the overlay) ----------
+
+    def broadcast_time(self, overlay: MultiRingOverlay, payload_ms: float = 0.0) -> float:
+        """Model dissemination root->leaves: max over leaves of path latency."""
+        t = 0.0
+        for n in self.nodes():
+            if n not in self.children or not self.children[n]:  # leaf
+                path = list(reversed(self.path_to_root(n)))
+                t = max(t, overlay.path_latency(path) + payload_ms * (len(path) - 1))
+        return t
+
+    def aggregation_time(self, overlay: MultiRingOverlay, payload_ms: float = 0.0) -> float:
+        return self.broadcast_time(overlay, payload_ms)  # symmetric schedule
+
+
+class Forest:
+    """All dataflow trees + the AD tree."""
+
+    def __init__(self, overlay: MultiRingOverlay, *, seed: int = 0):
+        self.overlay = overlay
+        self.trees: dict[int, DataflowTree] = {}
+        self.app_names: dict[str, int] = {}
+        self.ad_tree: DataflowTree | None = None
+        self.ad_registry: dict[int, dict] = {}  # app_id -> meta (held at AD root)
+
+    # -- tree construction (union of JOIN paths) ------------------------------
+
+    def app_id_of(self, name: str, salt: str = "") -> int:
+        return sha1_id(name, self.overlay.space.total_bits, salt)
+
+    def _rendezvous(self, key: int, restrict_zone: int | None) -> int:
+        space = self.overlay.space
+        if restrict_zone is not None:
+            nid = self.overlay._zone_closest(restrict_zone, space.suffix_of(key))
+            assert nid is not None
+            return nid
+        zone = self.overlay.nearest_zone(space.zone_of(key))
+        return self.overlay._zone_closest(zone, space.suffix_of(key))
+
+    def create_tree(self, name: str, *, salt: str = "", restrict_zone: int | None = None, meta=None) -> DataflowTree:
+        app_id = self.app_id_of(name, salt)
+        root = self._rendezvous(app_id, restrict_zone)
+        tree = DataflowTree(app_id=app_id, root=root, meta=meta or {"name": name})
+        tree.meta.setdefault("restrict_zone", restrict_zone)
+        self.trees[app_id] = tree
+        self.app_names[name] = app_id
+        self._advertise(app_id, tree.meta)
+        return tree
+
+    @staticmethod
+    def _graft_path(tree: DataflowTree, path: list[int]) -> None:
+        """Union-of-JOIN-paths rule: register child->parent edges along the
+        route until the path meets the existing tree."""
+        for a, b in zip(path, path[1:]):
+            if a == tree.root or a in tree.parent:
+                return
+            tree.parent[a] = b
+            tree.children.setdefault(b, []).append(a)
+        last = path[-1]
+        if last != tree.root and last not in tree.parent:
+            tree.parent[last] = tree.root
+            tree.children.setdefault(tree.root, []).append(last)
+
+    def subscribe(self, app_id: int, node: int) -> RouteResult:
+        """JOIN: route toward AppId; graft onto the first tree node hit."""
+        tree = self.trees[app_id]
+        res = self.overlay.route(node, app_id, restrict_zone=tree.meta.get("restrict_zone"))
+        tree.members.add(node)
+        self._graft_path(tree, res.path)
+        return res
+
+    def unsubscribe(self, app_id: int, node: int) -> None:
+        """LEAVE: prune if the node is a leaf with no subtree members."""
+        tree = self.trees[app_id]
+        tree.members.discard(node)
+        while (
+            node != tree.root
+            and not tree.children.get(node)
+            and node not in tree.members
+            and node in tree.parent
+        ):
+            p = tree.parent.pop(node)
+            tree.children[p].remove(node)
+            node = p
+
+    # -- AD tree (advertise / discover) ---------------------------------------
+
+    def _ensure_ad_tree(self) -> DataflowTree:
+        if self.ad_tree is None:
+            ad_id = self.app_id_of(AD_TOPIC)
+            root = self._rendezvous(ad_id, None)
+            self.ad_tree = DataflowTree(app_id=ad_id, root=root, meta={"name": AD_TOPIC})
+        return self.ad_tree
+
+    def _advertise(self, app_id: int, meta: dict) -> None:
+        """The new master JOINs the AD tree and pushes (AppId, meta) to its
+        root, which maintains the registry (paper Appendix A)."""
+        ad = self._ensure_ad_tree()
+        master = self.trees[app_id].root
+        if master != ad.root and master not in ad.parent:
+            res = self.overlay.route(master, ad.app_id)
+            ad.members.add(master)
+            self._graft_path(ad, res.path)
+        self.ad_registry[app_id] = dict(meta)
+
+    def discover(self, node: int, *, leave_after: bool = True) -> dict[int, dict]:
+        """A node subscribes to the AD tree, receives the registry of running
+        applications, and (by default) leaves immediately."""
+        ad = self._ensure_ad_tree()
+        res = self.overlay.route(node, ad.app_id)
+        registry = dict(self.ad_registry)
+        if not leave_after:
+            ad.members.add(node)
+            self._graft_path(ad, res.path)
+        return registry
+
+    # -- stats ----------------------------------------------------------------
+
+    def masters_per_node(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for t in self.trees.values():
+            out[t.root] = out.get(t.root, 0) + 1
+        return out

@@ -1,0 +1,86 @@
+"""Algorithm 2: multicast-enabled distributed hop-by-hop routing
+(paper Appendix N-B).
+
+Actions become hop SUBSETS (send to multiple next hops simultaneously);
+rewards live in [0, F] where F is the max subset size.  The policy-update
+math is unchanged — Algorithm 1 over the enumerated subset action space
+(the paper: "each policy in Delta(P_n) becomes a |subsets|-dimensional
+vector") — so ``algorithm1_episode`` is reused verbatim, which is exactly
+the paper's construction.  The Nash-regret bound for this variant is
+open (the paper leaves it to future work); we report empirical regret.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from itertools import combinations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .congestion import CongestionEnv
+from .pathplan import algorithm1_episode, candidate_policy_set
+
+
+def enumerate_subsets(K: int, max_size: int = 2) -> np.ndarray:
+    """All non-empty hop subsets up to ``max_size`` as a (M, K) 0/1 matrix."""
+    rows = []
+    for size in range(1, max_size + 1):
+        for combo in combinations(range(K), size):
+            v = np.zeros(K)
+            v[list(combo)] = 1.0
+            rows.append(v)
+    return np.stack(rows)
+
+
+@dataclass
+class MulticastPlanner:
+    """Totoro+ Algorithm 2: policies over subset actions."""
+
+    num_nodes: int
+    num_paths: int
+    max_subset: int = 2
+    tau: int = 8
+    alpha: float = 0.95
+    beta: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        self.subsets = jnp.asarray(enumerate_subsets(self.num_paths, self.max_subset), jnp.float32)
+        M = self.subsets.shape[0]
+        self.pi = jnp.full((self.num_nodes, M), 1.0 / M, jnp.float32)
+        self.mask = jnp.ones((self.num_nodes, M), bool)
+        self.cand = candidate_policy_set(M, seed=self.seed)
+
+    def sample_actions(self, key) -> jnp.ndarray:
+        """(N, tau) subset-action indices."""
+        return jax.random.categorical(
+            key, jnp.log(jnp.maximum(self.pi, 1e-12))[:, None, :].repeat(self.tau, 1)
+        )
+
+    def rewards(self, env: CongestionEnv, actions: jnp.ndarray, key) -> jnp.ndarray:
+        """Reward of a subset = sum of member-hop rewards under the joint
+        congestion produced by ALL selected hops of all nodes (in [0, F])."""
+        sel = self.subsets[actions]  # (N, tau, K) 0/1
+        out = []
+        for t in range(actions.shape[1]):
+            s_t = sel[:, t]  # (N, K)
+            counts = jnp.sum(s_t, axis=0)  # users per hop
+            rate = env.capacity[None, :] / jnp.maximum(counts[None, :], 1.0)
+            lat = env.base_ms + 1e3 * env.packet_mbit / jnp.maximum(rate, 1e-6)
+            r = jnp.clip(1.0 - lat / env.l_max_ms, 0.0, 1.0) * env.theta[None, :]
+            ok = jax.random.bernoulli(jax.random.fold_in(key, t), env.theta[None, :].repeat(s_t.shape[0], 0))
+            out.append(jnp.sum(s_t * r * ok, axis=-1))
+        return jnp.stack(out, axis=1)  # (N, tau)
+
+    def update(self, actions, rewards) -> None:
+        self.pi = algorithm1_episode(
+            self.pi, self.mask, self.cand, actions, rewards,
+            tau=self.tau, alpha=self.alpha, beta=self.beta,
+        )
+
+    def subset_usage(self) -> np.ndarray:
+        """Mean policy mass per subset size (diagnostics)."""
+        sizes = np.asarray(self.subsets.sum(-1))
+        mass = np.asarray(self.pi.mean(0))
+        return np.asarray([mass[sizes == s].sum() for s in range(1, self.max_subset + 1)])

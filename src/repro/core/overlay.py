@@ -1,0 +1,349 @@
+"""Layer 1: locality-aware P2P multi-ring structure (paper §IV-B).
+
+Edge nodes self-organize into m zone rings via Ratnasamy–Shenker
+distributed binning over landmark RTTs.  Each node keeps:
+  - a two-level routing table — level 1 fingers across zones at
+    (P_x + 2^{i-1}) mod 2^m (scaled by 2^n), level 2 fingers within the
+    zone at (S_y + j*2^{b*i}) mod 2^n for digits j in [1, 2^b) — per the
+    paper's table definition, generalized to base 2^b so the dataflow-tree
+    fanout is configurable (the paper evaluates b = 3, 4, 5);
+  - a leaf set (closest ids both sides, for repair + final delivery);
+  - a neighborhood set (physically closest nodes, for state replication).
+
+Scaling note: tables are evaluated *by rule* against the live membership
+(sorted-array successor lookup) rather than materialized per node, so the
+simulator routes on 10^6-node rings in microseconds while following
+exactly the hop sequence a materialized table would produce;
+``routing_table_of`` materializes a node's table for inspection/tests.
+Routing never uses global knowledge beyond each hop's own entries.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .nodeid import IdSpace, abs_ring_distance, ring_distance
+
+
+@dataclass
+class RouteResult:
+    path: list[int]  # node ids visited (src first, destination last)
+    hops: int
+    blocked: bool = False  # administrative isolation block
+
+    @property
+    def dest(self) -> int:
+        return self.path[-1]
+
+
+class MultiRingOverlay:
+    def __init__(
+        self,
+        space: IdSpace,
+        *,
+        base_bits: int = 4,
+        leaf_size: int = 24,
+        neighborhood_size: int = 8,
+        seed: int = 0,
+    ):
+        self.space = space
+        self.b = base_bits
+        self.leaf_size = leaf_size
+        self.neighborhood_size = neighborhood_size
+        self.rng = np.random.default_rng(seed)
+        self.zone_members: dict[int, list[int]] = {}  # zone -> sorted suffixes
+        self.coords: dict[int, tuple[float, float]] = {}  # node_id -> position
+        self.alive: set[int] = set()
+        self.bandwidth: dict[int, float] = {}  # Mbps per node
+        self.physical_group: dict[int, int] = {}  # logical id -> physical id (App. L)
+
+    # -- membership ---------------------------------------------------------
+
+    def join(self, zone: int, suffix: int, coord=(0.0, 0.0), bandwidth: float = 100.0) -> int:
+        nid = self.space.make(zone, suffix)
+        members = self.zone_members.setdefault(zone, [])
+        i = bisect.bisect_left(members, suffix)
+        if i < len(members) and members[i] == suffix:
+            raise ValueError(f"suffix collision {suffix} in zone {zone}")
+        members.insert(i, suffix)
+        self.coords[nid] = tuple(coord)
+        self.bandwidth[nid] = bandwidth
+        self.alive.add(nid)
+        return nid
+
+    def join_random(self, zone: int, coord=(0.0, 0.0), bandwidth: float = 100.0) -> int:
+        while True:
+            suffix = int(self.rng.integers(0, self.space.suffix_space))
+            try:
+                return self.join(zone, suffix, coord, bandwidth)
+            except ValueError:
+                continue
+
+    def join_weighted(self, zone: int, units: int, coord=(0.0, 0.0), bandwidth: float = 100.0) -> list[int]:
+        """Appendix L: heterogeneous resources via LOGICAL nodes — a
+        physical node with ``units`` resource units joins as that many
+        P2P nodes (more units => proportionally more master assignments);
+        the ids are recorded as one physical group for accounting."""
+        ids = [self.join_random(zone, coord, bandwidth) for _ in range(max(1, units))]
+        group = ids[0]
+        for nid in ids:
+            self.physical_group[nid] = group
+        return ids
+
+    def leave(self, node_id: int) -> None:
+        zone, suffix = self.space.zone_of(node_id), self.space.suffix_of(node_id)
+        members = self.zone_members.get(zone, [])
+        i = bisect.bisect_left(members, suffix)
+        if i < len(members) and members[i] == suffix:
+            members.pop(i)
+        self.alive.discard(node_id)
+
+    def fail(self, node_id: int) -> None:
+        """Crash-fail (no graceful handoff) — same membership effect."""
+        self.leave(node_id)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.alive)
+
+    def zones(self) -> list[int]:
+        return [z for z, m in self.zone_members.items() if m]
+
+    def nodes(self) -> list[int]:
+        return sorted(self.alive)
+
+    # -- successor / closest lookups (the "by-rule" table evaluation) --------
+
+    def _zone_successor(self, zone: int, suffix: int) -> int | None:
+        members = self.zone_members.get(zone)
+        if not members:
+            return None
+        i = bisect.bisect_left(members, suffix) % len(members)
+        return self.space.make(zone, members[i])
+
+    def _zone_closest(self, zone: int, suffix: int) -> int | None:
+        members = self.zone_members.get(zone)
+        if not members:
+            return None
+        i = bisect.bisect_left(members, suffix)
+        cands = {members[i % len(members)], members[(i - 1) % len(members)]}
+        best = min(
+            cands, key=lambda s: abs_ring_distance(suffix, s, self.space.suffix_space)
+        )
+        return self.space.make(zone, best)
+
+    def nearest_zone(self, zone: int) -> int | None:
+        """Next non-empty zone clockwise from `zone` (incl. itself)."""
+        for d in range(self.space.num_zones):
+            z = (zone + d) % self.space.num_zones
+            if self.zone_members.get(z):
+                return z
+        return None
+
+    # -- leaf / neighborhood sets --------------------------------------------
+
+    def leaf_set(self, node_id: int) -> list[int]:
+        zone, suffix = self.space.zone_of(node_id), self.space.suffix_of(node_id)
+        members = self.zone_members.get(zone, [])
+        if len(members) <= 1:
+            return []
+        i = bisect.bisect_left(members, suffix)
+        half = self.leaf_size // 2
+        out = []
+        for d in range(1, half + 1):
+            out.append(self.space.make(zone, members[(i + d) % len(members)]))
+            out.append(self.space.make(zone, members[(i - d) % len(members)]))
+        return [x for x in dict.fromkeys(out) if x != node_id]
+
+    def neighborhood_set(self, node_id: int) -> list[int]:
+        """Physically closest live nodes (for master state replication)."""
+        cx, cy = self.coords[node_id]
+        others = [n for n in self.alive if n != node_id]
+        others.sort(key=lambda n: (self.coords[n][0] - cx) ** 2 + (self.coords[n][1] - cy) ** 2)
+        return others[: self.neighborhood_size]
+
+    # -- routing -------------------------------------------------------------
+
+    def _digit_prefix_len(self, a: int, b_: int) -> int:
+        """Common prefix length in base-2^b digits, MSB first."""
+        n = self.space.suffix_bits
+        rows = (n + self.b - 1) // self.b
+        for p in range(rows):
+            shift = max(0, n - self.b * (p + 1))
+            if (a >> shift) != (b_ >> shift):
+                return p
+        return rows
+
+    def _next_hop_in_zone(self, cur_suffix: int, key_suffix: int, zone: int) -> int | None:
+        """Pastry-style digit-fixing hop: jump to the canonical node of the
+        range sharing one more base-2^b digit with the key.  Canonical =
+        clockwise successor of the range start, so paths from different
+        sources CONVERGE (the paper's path-convergence property) and tree
+        fanout is bounded by 2^b (+ leaf-set final hops)."""
+        n = self.space.suffix_bits
+        rows = (n + self.b - 1) // self.b
+        p = self._digit_prefix_len(cur_suffix, key_suffix)
+        while p < rows:
+            shift = max(0, n - self.b * (p + 1))
+            # Plaxton rule: fix the key's next digit, KEEP the source's
+            # remaining digits — paths from different sources spread across
+            # the range and converge progressively (bounded tree fanout),
+            # instead of all landing on one canonical node per level.
+            target = ((key_suffix >> shift) << shift) | (cur_suffix & ((1 << shift) - 1))
+            nxt = self._zone_successor(zone, target)
+            if nxt is None:
+                return None
+            ns = self.space.suffix_of(nxt)
+            if (ns >> shift) == (key_suffix >> shift) and ns != cur_suffix:
+                return nxt
+            p += 1  # empty range: try to fix the next digit
+        # all populated ranges exhausted: leaf-set final hop
+        nxt = self._zone_closest(zone, key_suffix)
+        return nxt if nxt is not None and self.space.suffix_of(nxt) != cur_suffix else None
+
+    def route(
+        self,
+        src: int,
+        key: int,
+        *,
+        restrict_zone: int | None = None,
+        max_hops: int | None = None,
+    ) -> RouteResult:
+        """Greedy two-level prefix/finger routing to the node numerically
+        closest to `key`.  ``restrict_zone`` enforces administrative
+        isolation (level-1 entries disabled; cross-zone packets blocked)."""
+        space = self.space
+        cur = src
+        path = [cur]
+        key_zone, key_suffix = space.zone_of(key), space.suffix_of(key)
+        max_hops = max_hops or (4 * space.total_bits)
+
+        for _ in range(max_hops):
+            cur_zone = space.zone_of(cur)
+            if restrict_zone is not None and cur_zone != restrict_zone:
+                return RouteResult(path, len(path) - 1, blocked=True)
+
+            if cur_zone != key_zone and restrict_zone is None:
+                # level 1: finger across zones toward the key's zone
+                target_zone = self.nearest_zone(key_zone)
+                if target_zone is None:
+                    break
+                if target_zone == cur_zone:
+                    key_zone = cur_zone  # key's zone empty -> deliver here
+                    continue
+                dz = ring_distance(cur_zone, target_zone, space.num_zones)
+                step = 1 << (dz.bit_length() - 1)
+                hop_zone = (cur_zone + step) % space.num_zones
+                hop_zone = self.nearest_zone(hop_zone)
+                # land near the *source's* suffix (spread; suffix digits are
+                # fixed by level-2 routing once inside the key's zone)
+                nxt = self._zone_closest(hop_zone, space.suffix_of(cur))
+                if nxt is None or nxt == cur:
+                    break
+                cur = nxt
+                path.append(cur)
+                continue
+
+            if restrict_zone is not None and key_zone != restrict_zone:
+                key_zone = restrict_zone  # deliver within the restricted ring
+
+            # destination reached: the numerically closest node in the zone
+            if cur == self._zone_closest(cur_zone, key_suffix):
+                break
+
+            # level 2: canonical digit-fixing within the zone
+            nxt = self._next_hop_in_zone(space.suffix_of(cur), key_suffix, cur_zone)
+            if nxt is None or nxt == cur or nxt in path[-2:]:
+                # no better hop / would cycle: deliver via leaf set
+                final = self._zone_closest(cur_zone, key_suffix)
+                if final is not None and final != cur and final not in path:
+                    path.append(final)
+                break
+            cur = nxt
+            path.append(cur)
+
+        return RouteResult(path, len(path) - 1)
+
+    # -- table materialization (inspection / tests) --------------------------
+
+    def routing_table_of(self, node_id: int) -> dict:
+        """Materialize the node's two-level routing table per the paper's
+        entry rule: L1[i] = (P_x + 2^{i-1}) mod 2^m * 2^n,
+        L2 rows of base-2^b digit fingers."""
+        space = self.space
+        zone, suffix = space.zone_of(node_id), space.suffix_of(node_id)
+        l1 = []
+        for i in range(1, space.zone_bits + 1):
+            tz = (zone + (1 << (i - 1))) % space.num_zones
+            tz_live = self.nearest_zone(tz)
+            l1.append(
+                self._zone_closest(tz_live, suffix) if tz_live is not None else None
+            )
+        l2 = []
+        rows = (space.suffix_bits + self.b - 1) // self.b
+        for i in range(rows):
+            row = []
+            for j in range(1, 1 << self.b):
+                t = (suffix + j * (1 << (self.b * i))) % space.suffix_space
+                row.append(self._zone_closest(zone, t))
+            l2.append(row)
+        return {"level1": l1, "level2": l2}
+
+    # -- latency model --------------------------------------------------------
+
+    def rtt(self, a: int, b: int) -> float:
+        """Synthetic RTT (ms) from coordinates: 0.1 ms/unit + 1 ms base."""
+        (ax, ay), (bx, by) = self.coords[a], self.coords[b]
+        return 1.0 + 0.1 * ((ax - bx) ** 2 + (ay - by) ** 2) ** 0.5
+
+    def path_latency(self, path: list[int]) -> float:
+        return sum(self.rtt(a, b) for a, b in zip(path, path[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Ratnasamy–Shenker distributed binning (paper §IV-B, [55])
+
+
+def distributed_binning(
+    coords: np.ndarray, num_landmarks: int, *, levels: int = 3, seed: int = 0
+) -> np.ndarray:
+    """Bin nodes by landmark-RTT ordering (+ RTT-level quantization).
+
+    Returns an integer bin id per node; bins with identical landmark
+    orderings and level vectors land in the same zone — nearby nodes get
+    the same bin without any coordination beyond landmark pings.
+    """
+    rng = np.random.default_rng(seed)
+    landmarks = coords[rng.choice(len(coords), size=num_landmarks, replace=False)]
+    d = np.sqrt(((coords[:, None, :] - landmarks[None, :, :]) ** 2).sum(-1))  # (N, L)
+    order = np.argsort(d, axis=1)  # landmark ordering
+    dmax = d.max() + 1e-9
+    level = np.minimum((d / dmax * levels).astype(int), levels - 1)
+    bins: dict[tuple, int] = {}
+    out = np.zeros(len(coords), dtype=np.int64)
+    for i in range(len(coords)):
+        key = (tuple(order[i]), tuple(level[i][order[i]]))
+        out[i] = bins.setdefault(key, len(bins))
+    return out
+
+
+def build_overlay_from_coords(
+    coords: np.ndarray,
+    space: IdSpace,
+    *,
+    base_bits: int = 4,
+    bandwidth_range=(20.0, 100.0),
+    seed: int = 0,
+) -> tuple[MultiRingOverlay, list[int]]:
+    """EUA-style construction: bin nodes into zones, assign random suffixes."""
+    overlay = MultiRingOverlay(space, base_bits=base_bits, seed=seed)
+    nbins = distributed_binning(coords, min(space.num_zones, max(2, space.num_zones)), seed=seed)
+    zones = nbins % space.num_zones
+    rng = np.random.default_rng(seed + 1)
+    ids = []
+    for i, z in enumerate(zones):
+        bw = float(rng.uniform(*bandwidth_range))
+        ids.append(overlay.join_random(int(z), coord=coords[i], bandwidth=bw))
+    return overlay, ids

@@ -1,0 +1,255 @@
+"""Game-theoretic path planning — Algorithm 1 (paper §V-B), in JAX.
+
+Per episode, every node: (line 3) samples tau next hops from its policy
+and observes bandit rewards; (line 5) picks the exploratory policy
+rho = argmin_det M(lambda) over its candidate policy set Delta(P_n);
+(line 6) estimates the potential gradient by importance-weighted linear
+regression grad(p) = (1/tau) sum_t psi(p)^T M(pi)^{-1} psi(p_t) r_t —
+with one-hot psi this is sum_t 1[p_t=p] r_t / pi(p); (line 7) takes the
+candidate maximizing <lambda, grad>; (line 8) Frank–Wolfe mixes with
+exploration: pi' = alpha[pi + beta(pi~ - pi)] + (1-alpha) rho.
+
+Everything is vmapped over nodes and jitted — the per-node update is pure
+matrix algebra (the O(log N * Matmul) claim, Fig. 15/16); the Pallas
+``policy_update`` kernel is the TPU port of the same update.
+
+Baselines (paper §VII-E): the EuroSys'24 Totoro bandit planner (UCB on
+per-hop delay, congestion-blind) and OPT (knows capacities; greedy
+balanced assignment).  ``nash_regret`` evaluates both per Definition 2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .congestion import CongestionEnv
+
+NEG = -1e9
+
+
+def candidate_policy_set(K: int, num_random: int = 8, *, seed: int = 0) -> jnp.ndarray:
+    """Delta(P_n): a finite candidate set over K hops — the uniform policy,
+    per-hop skewed corners (0.9 mass), and a few Dirichlet samples.
+    All entries strictly positive (Theorem 1's no-zero-element condition)."""
+    rng = np.random.default_rng(seed)
+    cands = [np.full(K, 1.0 / K)]
+    for k in range(K):
+        v = np.full(K, 0.1 / max(K - 1, 1))
+        v[k] = 0.9
+        cands.append(v)
+    for _ in range(num_random):
+        cands.append(rng.dirichlet(np.ones(K)) * 0.9 + 0.1 / K)
+    M = np.stack(cands)
+    return jnp.asarray(M / M.sum(-1, keepdims=True), jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("tau",))
+def algorithm1_episode(pi, mask, cand, actions, rewards, *, tau: int, alpha: float, beta: float):
+    """One Algorithm-1 policy update, batched over nodes.
+
+    pi: (N, K) current policies;  mask: (N, K) valid-hop mask;
+    cand: (M, K) candidate policy set Delta(P_n) (shared, re-masked per node);
+    actions: (N, tau) sampled hop indices;  rewards: (N, tau).
+    Returns pi^{k+1}: (N, K).
+    """
+    maskf = mask.astype(jnp.float32)
+
+    # re-normalize the candidate set onto each node's valid hops
+    candn = cand[None] * maskf[:, None, :]  # (N, M, K)
+    candn = candn / jnp.maximum(candn.sum(-1, keepdims=True), 1e-12)
+
+    # line 5: rho = argmin det M(lambda); one-hot psi => det = prod lambda_k
+    logdet = jnp.where(maskf[:, None, :] > 0, jnp.log(jnp.maximum(candn, 1e-12)), 0.0).sum(-1)
+    rho = candn[jnp.arange(pi.shape[0]), jnp.argmin(logdet, axis=1)]  # (N, K)
+
+    # line 6: importance-weighted gradient estimate (M(pi)^{-1} = diag(1/pi))
+    onehot = jax.nn.one_hot(actions, pi.shape[1], dtype=jnp.float32)  # (N, tau, K)
+    grad = (onehot * rewards[..., None]).sum(1) / (tau * jnp.maximum(pi, 1e-12))
+    grad = grad * maskf
+
+    # line 7: best candidate by inner product
+    scores = jnp.einsum("nmk,nk->nm", candn, grad)
+    pi_tilde = candn[jnp.arange(pi.shape[0]), jnp.argmax(scores, axis=1)]
+
+    # line 8: Frank–Wolfe + exploration mixture
+    pi_new = alpha * (pi + beta * (pi_tilde - pi)) + (1.0 - alpha) * rho
+    pi_new = pi_new * maskf
+    return pi_new / jnp.maximum(pi_new.sum(-1, keepdims=True), 1e-12)
+
+
+@dataclass
+class GameTheoreticPlanner:
+    """Totoro+ planner (Algorithm 1)."""
+
+    num_nodes: int
+    num_paths: int
+    tau: int = 8
+    alpha: float = 0.9
+    beta: float = 0.5
+    mask: jnp.ndarray | None = None  # (N, K) valid hops
+    seed: int = 0
+
+    def __post_init__(self):
+        K = self.num_paths
+        self.mask = (
+            jnp.ones((self.num_nodes, K), bool) if self.mask is None else self.mask
+        )
+        pi = jnp.ones((self.num_nodes, K), jnp.float32) * self.mask
+        self.pi = pi / pi.sum(-1, keepdims=True)
+        self.cand = candidate_policy_set(K, seed=self.seed)
+
+    def sample_actions(self, key) -> jnp.ndarray:
+        """(tau,) packets per node, i.i.d. from the current policies."""
+        return jax.random.categorical(
+            key, jnp.log(jnp.maximum(self.pi, 1e-12))[:, None, :].repeat(self.tau, 1)
+        )
+
+    def update(self, actions, rewards) -> None:
+        self.pi = algorithm1_episode(
+            self.pi, self.mask, self.cand, actions, rewards,
+            tau=self.tau, alpha=self.alpha, beta=self.beta,
+        )
+
+
+@dataclass
+class BanditPlanner:
+    """EuroSys'24 Totoro baseline: per-hop UCB on observed reward,
+    congestion-blind (Appendix B's bandit model)."""
+
+    num_nodes: int
+    num_paths: int
+    tau: int = 8
+    explore_c: float = 0.5
+    epsilon: float = 0.05
+
+    def __post_init__(self):
+        N, K = self.num_nodes, self.num_paths
+        self.counts = jnp.ones((N, K), jnp.float32)
+        self.means = jnp.zeros((N, K), jnp.float32)
+        self.t = 1
+
+    @property
+    def pi(self) -> jnp.ndarray:
+        """Greedy-UCB induced (nearly deterministic) policy."""
+        ucb = self.means + self.explore_c * jnp.sqrt(jnp.log(self.t + 1.0) / self.counts)
+        best = jnp.argmax(ucb, axis=1)
+        eye = jax.nn.one_hot(best, self.num_paths)
+        return (1 - self.epsilon) * eye + self.epsilon / self.num_paths
+
+    def sample_actions(self, key) -> jnp.ndarray:
+        return jax.random.categorical(
+            key, jnp.log(jnp.maximum(self.pi, 1e-12))[:, None, :].repeat(self.tau, 1)
+        )
+
+    def update(self, actions, rewards) -> None:
+        onehot = jax.nn.one_hot(actions, self.num_paths, dtype=jnp.float32)
+        cnt = onehot.sum(1)
+        s = (onehot * rewards[..., None]).sum(1)
+        new_counts = self.counts + cnt
+        self.means = (self.means * self.counts + s) / new_counts
+        self.counts = new_counts
+        self.t += self.tau
+
+
+@dataclass
+class OptPlanner:
+    """OPT oracle: knows capacities/thetas; greedy balanced assignment
+    maximizing marginal mean reward given current congestion."""
+
+    env: CongestionEnv
+    num_nodes: int
+    tau: int = 8
+
+    def __post_init__(self):
+        P = self.env.num_paths
+        counts = np.zeros(P, np.int64)
+        assign = np.zeros(self.num_nodes, np.int64)
+        for n in range(self.num_nodes):
+            best, best_r = 0, -1.0
+            for p in range(P):
+                r = self.env.mean_reward(p, int(counts[p]) + 1)
+                if r > best_r:
+                    best, best_r = p, r
+            assign[n] = best
+            counts[best] += 1
+        self.assign = jnp.asarray(assign)
+
+    @property
+    def pi(self) -> jnp.ndarray:
+        return jax.nn.one_hot(self.assign, self.env.num_paths)
+
+    def sample_actions(self, key) -> jnp.ndarray:
+        return jnp.broadcast_to(self.assign[:, None], (self.num_nodes, self.tau))
+
+    def update(self, actions, rewards) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# evaluation: Nash regret + cumulative latency
+
+
+@partial(jax.jit, static_argnames=("samples",))
+def policy_values(env: CongestionEnv, pi: jnp.ndarray, key, samples: int = 64):
+    """Monte-Carlo V_n(pi) and best-response values V_n(a, pi_{-n}).
+
+    Returns (values (N,), best_response (N,)) using `samples` joint draws.
+    """
+    N, K = pi.shape
+    keys = jax.random.split(key, samples)
+
+    def draw(k):
+        a = jax.random.categorical(k, jnp.log(jnp.maximum(pi, 1e-12)))
+        counts = jnp.zeros(K, jnp.float32).at[a].add(1.0)
+        # on-policy reward per node (mean over link success)
+        rate = env.capacity[a] / jnp.maximum(counts[a], 1.0)
+        lat = env.base_ms + 1e3 * env.packet_mbit / jnp.maximum(rate, 1e-6)
+        r = jnp.clip(1.0 - lat / env.l_max_ms, 0.0, 1.0) * env.theta[a]
+        # deviation values: node n switches to pure action p (others fixed)
+        counts_wo = counts[None, :] - jax.nn.one_hot(a, K)  # (N, K)
+        cnt_dev = counts_wo + 1.0
+        rate_dev = env.capacity[None, :] / jnp.maximum(cnt_dev, 1.0)
+        lat_dev = env.base_ms + 1e3 * env.packet_mbit / jnp.maximum(rate_dev, 1e-6)
+        r_dev = jnp.clip(1.0 - lat_dev / env.l_max_ms, 0.0, 1.0) * env.theta[None, :]
+        return r, r_dev
+
+    rs, rdevs = jax.lax.map(draw, keys)
+    v = rs.mean(0)  # (N,)
+    v_dev = rdevs.mean(0)  # (N, K)
+    return v, jnp.max(v_dev, axis=1)
+
+
+def nash_regret_step(env, pi, key, samples: int = 64) -> float:
+    v, br = policy_values(env, pi, key, samples)
+    return float(jnp.max(br - v))
+
+
+def run_planner(planner, env: CongestionEnv, episodes: int, *, seed: int = 1, eval_samples: int = 64):
+    """Drive a planner; returns dict of per-episode series."""
+    key = jax.random.key(seed)
+    lat_total = 0.0
+    series = {"nash_regret": [], "cum_latency_ms": [], "mean_reward": []}
+    for ep in range(episodes):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        actions = planner.sample_actions(k1)  # (N, tau)
+        rws = []
+        lats = []
+        for t in range(actions.shape[1]):
+            kk = jax.random.fold_in(k2, t)
+            a_t = actions[:, t]
+            rws.append(env.rewards(a_t, kk))
+            lats.append(env.latency_ms(a_t))
+        rewards = jnp.stack(rws, 1)
+        lat_total += float(jnp.sum(jnp.stack(lats)) / actions.shape[0])
+        planner.update(actions, rewards)
+        series["nash_regret"].append(nash_regret_step(env, planner.pi, k3, eval_samples))
+        series["cum_latency_ms"].append(lat_total)
+        series["mean_reward"].append(float(jnp.mean(rewards)))
+    series["selection_freq"] = np.asarray(
+        jax.nn.one_hot(planner.sample_actions(jax.random.key(99)), env.num_paths).mean((0, 1))
+    )
+    return series

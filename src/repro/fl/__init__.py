@@ -1,0 +1,1 @@
+"""Federated-learning substrate (Totoro+ data plane on the mesh)."""

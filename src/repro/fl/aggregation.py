@@ -1,0 +1,61 @@
+"""FedAvg / FedProx aggregation and client weighting.
+
+Two call sites:
+  - the mesh data plane (LM-scale): weights enter at the loss level
+    (per-example weights), stragglers as zero-weight masks;
+  - the overlay simulation (paper-scale small models in ``fl/rounds.py``):
+    explicit weighted model-delta averaging along the dataflow tree,
+    including FedProx's proximal term during local training.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(deltas: Sequence, weights: Sequence[float]):
+    """Weighted average of client model deltas (pytrees)."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def avg(*leaves):
+        return sum(wi * l.astype(jnp.float32) for wi, l in zip(w, leaves))
+
+    return jax.tree.map(avg, *deltas)
+
+
+def pairwise_accumulate(acc, delta, weight: float):
+    """Streaming form used by internal tree nodes: acc += w * delta.
+
+    This is exactly what the ``tree_aggregate`` Pallas kernel computes on
+    flattened tiles at an aggregator node.
+    """
+    if acc is None:
+        return jax.tree.map(lambda d: weight * d.astype(jnp.float32), delta)
+    return jax.tree.map(lambda a, d: a + weight * d.astype(jnp.float32), acc, delta)
+
+
+def fedprox_grad(grads, params, round_start, mu: float):
+    """Add the FedProx proximal gradient mu * (w - w_global)."""
+    if mu == 0.0:
+        return grads
+    return jax.tree.map(
+        lambda g, p, w0: g + mu * (p.astype(jnp.float32) - w0.astype(jnp.float32)),
+        grads, params, round_start,
+    )
+
+
+def straggler_mask(weights: Sequence[float], completed: Sequence[bool]):
+    """Deadline-style straggler mitigation: drop late clients, renormalize."""
+    w = jnp.asarray(weights, jnp.float32) * jnp.asarray(completed, jnp.float32)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def server_update(global_params, agg_delta, server_lr: float = 1.0):
+    """FedOpt-style server step (plain SGD on the aggregated delta)."""
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
+        global_params, agg_delta,
+    )

@@ -1,0 +1,63 @@
+"""Gradient compression for the cross-zone (cross-pod) aggregation hop.
+
+The paper's ``Broadcast``/``Aggregate`` APIs accept application-specified
+compression functions (Table II; refs [37] QSGD, [38] signSGD).  These are
+the pure-JAX implementations; ``repro.kernels.quantize`` is the Pallas TPU
+version of the QSGD hot loop (bit-identical given the same random bits).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qsgd_quantize(x: jax.Array, *, levels: int = 127, key=None, rand=None):
+    """Stochastic int8 quantization with per-row scale.
+
+    x: (..., d).  Returns (q int8, scale f32 (..., 1)).
+    ``rand``: optional precomputed uniforms in [0,1) (for bit-exact refs).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / levels
+    scale = jnp.maximum(scale, 1e-12)
+    y = xf / scale
+    if rand is None:
+        rand = (
+            jax.random.uniform(key, x.shape) if key is not None else jnp.full(x.shape, 0.5)
+        )
+    q = jnp.floor(y + rand).astype(jnp.int8)
+    return q, scale
+
+
+def qsgd_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def signsgd_compress(x: jax.Array):
+    """1-bit sign compression with mean-|x| scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(xf), axis=-1, keepdims=True)
+    return jnp.sign(xf).astype(jnp.int8), scale
+
+
+def signsgd_decompress(s: jax.Array, scale: jax.Array) -> jax.Array:
+    return s.astype(jnp.float32) * scale
+
+
+def topk_sparsify(x: jax.Array, frac: float):
+    """Keep the top-``frac`` fraction by |value| (per leading row)."""
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(xf.shape[0], -1) if xf.ndim > 1 else xf[None]
+    k = max(1, int(flat.shape[-1] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat)
+    out = jax.vmap(lambda o, i, f: o.at[i].set(f[i]))(out, idx, flat)
+    return out.reshape(xf.shape)
+
+
+def error_feedback_update(x: jax.Array, err: jax.Array, compress_fn):
+    """EF-SGD: compress (x + err), carry the residual forward."""
+    target = x.astype(jnp.float32) + err
+    c, scale = compress_fn(target)
+    approx = c.astype(jnp.float32) * scale
+    return (c, scale), target - approx

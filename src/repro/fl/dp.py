@@ -1,0 +1,37 @@
+"""Differential-privacy hook (per-application customization, Table II).
+
+Clip-then-Gaussian-noise on gradient pytrees — the mechanism application
+owners can specify in ``Aggregate(app_id, object)`` per the paper §IV-E.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), n
+
+
+def gaussianize(tree, key, sigma: float):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        x + (sigma * jax.random.normal(k, x.shape)).astype(x.dtype)
+        for x, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noised)
+
+
+def dp_sanitize(grads, key, *, clip: float, sigma: float):
+    """Clip to ``clip`` then add N(0, (sigma*clip)^2) noise (per-round DP-SGD)."""
+    clipped, _ = clip_by_global_norm(grads, clip)
+    return gaussianize(clipped, key, sigma * clip)

@@ -1,0 +1,93 @@
+"""Paper-scale models for the FL-effectiveness benchmarks.
+
+The paper trains ResNet-34 / ShuffleNet-V2 on Google Speech / FEMNIST;
+those datasets are unavailable offline, so the time-to-accuracy benches
+use synthetic classification with an MLP and a small CNN (same role:
+a real local-training workload whose per-round cost we can measure).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.nn import dense_init, split_keys
+
+
+def init_mlp(key, dim: int, hidden: int, num_classes: int):
+    ks = split_keys(key, 3)
+    return {
+        "w1": dense_init(ks[0], dim, (hidden,), jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": dense_init(ks[1], hidden, (hidden,), jnp.float32),
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "w3": dense_init(ks[2], hidden, (num_classes,), jnp.float32),
+        "b3": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def init_cnn(key, num_classes: int, channels: int = 16):
+    """Tiny conv net over 16x16x1 synthetic images (ShuffleNet stand-in)."""
+    ks = split_keys(key, 3)
+    return {
+        "conv1": 0.1 * jax.random.normal(ks[0], (3, 3, 1, channels)),
+        "conv2": 0.1 * jax.random.normal(ks[1], (3, 3, channels, channels * 2)),
+        "head": dense_init(ks[2], 4 * 4 * channels * 2, (num_classes,), jnp.float32),
+    }
+
+
+def cnn_logits(params, x):
+    """x: (B, 16, 16, 1)."""
+    h = jax.lax.conv_general_dilated(
+        x, params["conv1"], (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h)
+    h = jax.lax.conv_general_dilated(
+        h, params["conv2"], (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h)
+    return h.reshape(h.shape[0], -1) @ params["head"]
+
+
+def ce_loss(logits, y):
+    return -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], axis=1)
+    )
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("logits_fn", "steps", "lr", "mu"))
+def local_train(params, global_params, x, y, *, logits_fn, steps: int, lr: float, mu: float = 0.0):
+    """E local SGD steps with optional FedProx proximal term; returns
+    (new_params, mean_loss).  This is the worker-side computation."""
+
+    def loss_fn(p):
+        base = ce_loss(logits_fn(p, x), y)
+        if mu > 0:
+            prox = sum(
+                jnp.sum(jnp.square(a - b))
+                for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(global_params))
+            )
+            base = base + 0.5 * mu * prox
+        return base
+
+    def step(p, _):
+        l, g = jax.value_and_grad(loss_fn)(p)
+        p = jax.tree.map(lambda w, gg: w - lr * gg, p, g)
+        return p, l
+
+    params, losses = jax.lax.scan(step, params, None, length=steps)
+    return params, jnp.mean(losses)
+
+
+LOGITS = {"mlp": mlp_logits, "cnn": cnn_logits}

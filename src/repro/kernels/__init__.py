@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for Totoro+'s compute hot-spots.
+
+tree_aggregate — weighted child-gradient reduction (aggregator inner loop)
+quantize      — QSGD int8 stochastic quantize/dequantize (cross-zone wire)
+policy_update — Algorithm 1 lines 5-8, batched over nodes
+fused_update  — fused SGD + FedProx proximal + weight decay
+
+Each: pl.pallas_call + explicit BlockSpec VMEM tiling; ops.py = jit'd
+public wrappers (interpret=True off-TPU); ref.py = pure-jnp oracles.
+"""

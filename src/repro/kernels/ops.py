@@ -1,0 +1,108 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes as pure JAX for correctness validation; on TPU (the
+target) they compile through Mosaic.  Wrappers handle padding to the
+kernels' tile multiples and pytree-level application.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import fused_update as _fu
+from . import policy_update as _pu
+from . import quantize as _q
+from . import tree_aggregate as _ta
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int = 0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def tree_aggregate(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """(C, L) x (C,) -> (L,) f32 weighted sum (pads L to the tile size)."""
+    g, pad = _pad_to(grads, _ta.TILE, axis=1)
+    out = _ta.tree_aggregate(g, weights, interpret=_interpret())
+    return out[: grads.shape[1]]
+
+
+def tree_aggregate_pytree(updates: list, weights) -> object:
+    """Aggregate a list of model-update pytrees with the kernel."""
+    w = jnp.asarray(weights, jnp.float32)
+    flats = [
+        jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(u)])
+        for u in updates
+    ]
+    stacked = jnp.stack(flats)  # (C, L)
+    agg = tree_aggregate(stacked, w)
+    # unflatten back into the first update's structure
+    leaves, treedef = jax.tree.flatten(updates[0])
+    out, off = [], 0
+    for l in leaves:
+        out.append(agg[off : off + l.size].reshape(l.shape))
+        off += l.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def qsgd_quantize(x: jax.Array, rand: jax.Array):
+    """(R, 256) -> (int8, scales); pads rows to the block size."""
+    xp, pad = _pad_to(x, _q.ROWS_PER_BLOCK, axis=0)
+    rp, _ = _pad_to(rand, _q.ROWS_PER_BLOCK, axis=0)
+    q, s = _q.qsgd_quantize(xp, rp, interpret=_interpret())
+    R = x.shape[0]
+    return q[:R], s[:R]
+
+
+def qsgd_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    qp, pad = _pad_to(q, _q.ROWS_PER_BLOCK, axis=0)
+    sp, _ = _pad_to(scale, _q.ROWS_PER_BLOCK, axis=0)
+    out = _q.qsgd_dequantize(qp, sp, interpret=_interpret())
+    return out[: q.shape[0]]
+
+
+def policy_update(pi, mask, cand, reward_sums, *, tau: int, alpha: float, beta: float):
+    """(N,K) policies -> updated policies (pads N to the node block)."""
+    N = pi.shape[0]
+    pi_p, _ = _pad_to(pi, _pu.NODE_BLOCK, axis=0)
+    # padded nodes get a valid uniform row to avoid 0/0
+    if pi_p.shape[0] != N:
+        pad_rows = pi_p.shape[0] - N
+        K = pi.shape[1]
+        pi_p = pi_p.at[N:].set(1.0 / K)
+    mask_p, _ = _pad_to(mask.astype(jnp.float32), _pu.NODE_BLOCK, axis=0)
+    mask_p = mask_p.at[N:].set(1.0) if mask_p.shape[0] != N else mask_p
+    rs_p, _ = _pad_to(reward_sums, _pu.NODE_BLOCK, axis=0)
+    out = _pu.policy_update(
+        pi_p, mask_p > 0, cand, rs_p, tau=tau, alpha=alpha, beta=beta,
+        interpret=_interpret(),
+    )
+    return out[:N]
+
+
+def fused_update(w, g, w0, *, lr: float, mu: float = 0.0, wd: float = 0.0):
+    """Flattened fused FedProx/SGD update (pads to the tile size)."""
+    shape, dtype = w.shape, w.dtype
+    wf, _ = _pad_to(w.ravel(), _fu.TILE)
+    gf, _ = _pad_to(g.ravel(), _fu.TILE)
+    w0f, _ = _pad_to(w0.ravel(), _fu.TILE)
+    out = _fu.fused_update(wf, gf, w0f, lr=lr, mu=mu, wd=wd, interpret=_interpret())
+    return out[: w.size].reshape(shape).astype(dtype)
+
+
+def fused_update_pytree(params, grads, round_start, *, lr, mu=0.0, wd=0.0):
+    return jax.tree.map(
+        lambda w, g, w0: fused_update(w, g, w0, lr=lr, mu=mu, wd=wd),
+        params, grads, round_start,
+    )

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_aggregate_ref(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted sum of C children's flattened gradient tiles.
+
+    grads: (C, L); weights: (C,) -> (L,) f32 (an aggregator node's inner
+    loop: acc = sum_c w_c * g_c, paper §IV-C gradient aggregation).
+    """
+    return jnp.einsum(
+        "c,cl->l", weights.astype(jnp.float32), grads.astype(jnp.float32)
+    )
+
+
+def quantize_ref(x: jax.Array, rand: jax.Array, levels: int = 127):
+    """QSGD stochastic int8 quantization with per-row max-abs scale.
+
+    x: (R, 256); rand: (R, 256) uniforms in [0,1) -> (q int8, scale (R,1)).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / levels
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.floor(xf / scale + rand.astype(jnp.float32))
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def policy_update_ref(
+    pi: jax.Array,  # (N, K)
+    mask: jax.Array,  # (N, K) bool
+    cand: jax.Array,  # (M, K)
+    reward_sums: jax.Array,  # (N, K): sum_t 1[a_t = k] r_t
+    tau: int,
+    alpha: float,
+    beta: float,
+) -> jax.Array:
+    """Algorithm-1 episode update (lines 5-8) with one-hot features.
+
+    Matches ``repro.core.pathplan.algorithm1_episode`` given
+    reward_sums[n, k] = sum over the episode's tau packets of r when hop k
+    was chosen.
+    """
+    maskf = mask.astype(jnp.float32)
+    candn = cand[None] * maskf[:, None, :]
+    candn = candn / jnp.maximum(candn.sum(-1, keepdims=True), 1e-12)
+    logdet = jnp.where(maskf[:, None, :] > 0, jnp.log(jnp.maximum(candn, 1e-12)), 0.0).sum(-1)
+    rho = jnp.take_along_axis(candn, jnp.argmin(logdet, 1)[:, None, None], 1)[:, 0]
+    grad = reward_sums / (tau * jnp.maximum(pi, 1e-12)) * maskf
+    scores = jnp.einsum("nmk,nk->nm", candn, grad)
+    pi_t = jnp.take_along_axis(candn, jnp.argmax(scores, 1)[:, None, None], 1)[:, 0]
+    pi_new = alpha * (pi + beta * (pi_t - pi)) + (1 - alpha) * rho
+    pi_new = pi_new * maskf
+    return pi_new / jnp.maximum(pi_new.sum(-1, keepdims=True), 1e-12)
+
+
+def fused_update_ref(
+    w: jax.Array, g: jax.Array, w0: jax.Array, lr: float, mu: float, wd: float
+) -> jax.Array:
+    """Fused SGD + FedProx proximal term + weight decay:
+    w' = w - lr * (g + mu*(w - w0) + wd*w)."""
+    wf = w.astype(jnp.float32)
+    out = wf - lr * (g.astype(jnp.float32) + mu * (wf - w0.astype(jnp.float32)) + wd * wf)
+    return out.astype(w.dtype)

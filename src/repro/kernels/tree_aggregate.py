@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: weighted child-gradient aggregation (tree node inner loop).
+
+An aggregator node in a Totoro+ dataflow tree combines C children's model
+updates: out = sum_c w_c * g_c over a flattened parameter vector.  The
+kernel tiles the parameter dim into MXU/VPU-aligned (C, TILE) VMEM blocks
+and accumulates in f32 regardless of the payload dtype (bf16 children
+updates are the common case after compression).
+
+Grid: one program per tile of L; the full child dim C sits in VMEM
+(C <= 32 children per the fanout configs, TILE*C*4B << 16 MB VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+
+
+def _kernel(g_ref, w_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)  # (C, TILE)
+    w = w_ref[...].astype(jnp.float32)  # (C, 1)
+    o_ref[...] = jnp.sum(g * w, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_aggregate(grads: jax.Array, weights: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """grads: (C, L) any float dtype; weights: (C,) -> (L,) f32.
+
+    L must be a multiple of TILE (callers pad; ops.py handles it).
+    """
+    C, L = grads.shape
+    assert L % TILE == 0, L
+    w2 = weights.reshape(C, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        grid=(L // TILE,),
+        in_specs=[
+            pl.BlockSpec((C, TILE), lambda i: (0, i)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=interpret,
+    )(grads, w2)

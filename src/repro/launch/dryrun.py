@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Reduce XLA:CPU codegen effort: SPMD partitioning (what we analyze) is
+# unaffected; LLVM-side optimization of the host code is irrelevant to the
+# TPU-target roofline and costs minutes per 100B-scale cell on this 1-core
+# box (verified identical roofline terms with/without).
+if os.environ.get("REPRO_FULL_OPT") != "1":
+    os.environ["XLA_FLAGS"] += (
+        " --xla_backend_optimization_level=0 --xla_llvm_disable_expensive_passes=true"
+    )
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: ``jit(step).lower(**input_specs).compile()`` on the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, record
+``memory_analysis()`` / ``cost_analysis()`` / collective schedule, and
+derive the three roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results.json]
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, aggregation=None, quiet=False,
+             cfg_overrides=None, grad_accum=None):
+    import jax
+    from repro import configs
+    from repro.config import SHAPES
+    from repro.launch import hlo as hlo_mod
+    from repro.launch import mesh as mesh_mod
+    from repro.launch import specs as specs_mod
+    from repro.models import encdec, lm
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    nchips = mesh.devices.size
+    cell = specs_mod.build_cell(arch, shape_name, mesh, aggregation=aggregation,
+                                cfg_overrides=cfg_overrides, grad_accum=grad_accum)
+    t0 = time.time()
+    lowered = specs_mod.lower_cell(cell, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    mod = hlo_mod.analyze_module(txt)  # trip-count-aware (see hlo.py docstring)
+
+    flops = float(mod.flops)
+    bytes_acc = float(mod.hbm_bytes)
+    terms = hlo_mod.roofline_terms(flops, bytes_acc, mod.collective_bytes)
+
+    model = encdec if cell.cfg.is_encoder_decoder else lm
+    if cell.cfg.is_encoder_decoder:
+        import jax.numpy as jnp
+
+        shapes = jax.eval_shape(lambda k: model.init_params(k, cell.cfg), jax.random.key(0))
+        n_total = sum(int(x.size) for x in jax.tree.leaves(shapes))
+        n_active = n_total
+    else:
+        n_total, n_active = lm.count_params_analytic(cell.cfg)
+    mflops = hlo_mod.model_flops(cell.cfg, cell.shape, n_total, n_active)
+    ratio = mflops / (flops * nchips) if flops else 0.0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": nchips,
+        "aggregation": cell.plan.aggregation if cell.shape.kind == "train" else None,
+        "grad_accum": cell.plan.grad_accum,
+        "params_total": n_total,
+        "params_active": n_active,
+        "lower_s": round(t1 - t0, 1),
+        "compile_s": round(t2 - t1, 1),
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "peak_bytes_per_dev": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_dev": flops,
+            "bytes_per_dev": bytes_acc,
+            "xla_flops_per_dev_loop_undercounted": float(cost.get("flops", 0.0)),
+            "xla_bytes_per_dev_loop_undercounted": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": {
+            "total_bytes_per_dev": mod.collective_bytes,
+            "bytes_by_kind": {k: round(v) for k, v in mod.coll_bytes_by_kind.items()},
+            "count_by_kind": {k: round(v) for k, v in mod.coll_count_by_kind.items()},
+            "loops": [(b, t, m) for b, t, m in mod.loops if t > 1][:40],
+        },
+        "roofline": {
+            **terms,
+            "model_flops": mflops,
+            "useful_flops_ratio": ratio,
+        },
+    }
+    if not quiet:
+        print(f"== {arch} x {shape_name} x {result['mesh']} ==")
+        print("memory_analysis:", mem)
+        print("cost_analysis flops/bytes per dev:", flops, bytes_acc)
+        print(
+            "collectives:",
+            {k: f"{v/1e6:.1f}MB" for k, v in mod.coll_bytes_by_kind.items()},
+            {k: round(v) for k, v in mod.coll_count_by_kind.items()},
+        )
+        print(
+            f"roofline: compute={terms['compute_s']*1e3:.2f}ms "
+            f"memory={terms['memory_s']*1e3:.2f}ms "
+            f"collective={terms['collective_s']*1e3:.2f}ms bound={terms['bound']} "
+            f"useful_flops_ratio={ratio:.3f}"
+        )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--aggregation", default=None,
+                    help="override: xla_auto | totoro_tree | totoro_tree_q8")
+    ap.add_argument("--out", default=None, help="append JSON results here")
+    args = ap.parse_args()
+
+    from repro import configs
+
+    if args.all:
+        cells = [
+            (a, s)
+            for a in configs.ARCH_IDS
+            for s in configs.runnable_cells(a)
+        ]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results, failures = [], []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(
+                    run_cell(arch, shape, multi_pod=mp, aggregation=args.aggregation)
+                )
+            except Exception as e:
+                traceback.print_exc()
+                failures.append({"arch": arch, "shape": shape, "multi_pod": mp, "error": str(e)})
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        with open(args.out, "w") as f:
+            json.dump(existing + results, f, indent=1)
+    if failures:
+        print("FAILURES:", json.dumps(failures, indent=1))
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(results)} cells")
+
+
+if __name__ == "__main__":
+    main()

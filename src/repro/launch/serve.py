@@ -1,0 +1,78 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+Usage:
+  python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.fl import steps as steps_mod
+    from repro.models import encdec, lm
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get_config(args.arch)
+    model = encdec if cfg.is_encoder_decoder else lm
+    params = model.init_params(jax.random.key(0), cfg)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+    key = jax.random.key(1)
+
+    if cfg.is_encoder_decoder:
+        batch = {
+            "embeds": jax.random.normal(key, (B, P, cfg.d_model)) * 0.3,
+            "tokens": jax.random.randint(jax.random.fold_in(key, 1), (B, P), 0, cfg.vocab_size),
+        }
+        full_cache = encdec.init_cache(cfg, B, max_len, P)
+    elif cfg.embed_inputs:
+        batch = {"embeds": jax.random.normal(key, (B, P, cfg.d_model)) * 0.3}
+        full_cache = lm.init_cache(cfg, B, max_len)
+    else:
+        batch = {"tokens": jax.random.randint(key, (B, P), 0, cfg.vocab_size)}
+        full_cache = lm.init_cache(cfg, B, max_len)
+
+    prefill = jax.jit(steps_mod.build_prefill_step(cfg))
+    decode = jax.jit(steps_mod.build_decode_step(cfg), donate_argnums=(1,))
+
+    t0 = time.time()
+    pcache, tok = prefill(params, batch)
+
+    # merge prefill cache (prefix-length) into the max_len cache
+    def merge(full, pre):
+        def f(a, b):
+            if a.shape == b.shape:
+                return b.astype(a.dtype)
+            return jax.lax.dynamic_update_slice(a, b.astype(a.dtype), (0,) * a.ndim)
+        return jax.tree.map(f, full, pre)
+
+    cache = merge(full_cache, pcache)
+    t1 = time.time()
+
+    out_tokens = [tok]
+    for i in range(G - 1):
+        cache, tok = decode(params, cache, tok[:, None], jnp.asarray(P + i, jnp.int32))
+        out_tokens.append(tok)
+    toks = jnp.stack(out_tokens, axis=1)
+    t2 = time.time()
+    print(f"prefill {P} tokens x{B}: {t1-t0:.2f}s; decode {G} tokens: {(t2-t1)/max(G-1,1)*1e3:.1f} ms/token")
+    print("generated token ids (first row):", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

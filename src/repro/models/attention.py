@@ -1,0 +1,483 @@
+"""Attention: chunked-causal (flash-style) GQA and MLA, with KV caches.
+
+TPU adaptation notes (DESIGN.md §2):
+  - training/prefill use a chunked online-softmax loop (lax.scan over KV
+    chunks inside a scan over Q chunks) so the S x S score matrix is never
+    materialized — required at 32k prefill, and the memory-safe default at
+    4k given the per-chip batch sizes;
+  - decode uses plain attention math over the cache with the *sequence*
+    dim of the cache sharded over the `model` mesh axis (context-parallel
+    decode). GSPMD turns the softmax max/sum and the PV contraction into
+    small all-reduces — the flash-decoding pattern without shard_map;
+  - MLA decode uses the absorbed formulation: scores and outputs live in
+    the kv_lora latent space, the cache stays (S, lora+rope).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import nn
+from .nn import FSDP, TP, DP, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention core
+
+
+def _chunk(x, size, axis):
+    s = x.shape[axis]
+    n = s // size
+    new = x.shape[:axis] + (n, size) + x.shape[axis + 1 :]
+    return x.reshape(new)
+
+
+def _mask_chunk(q_pos, k_pos, causal, window):
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return mask
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, q_offset, chunk_q, chunk_kv, window, scale):
+    """Flash attention core with a flash backward (custom VJP) so autodiff
+    never stores per-chunk score matrices — forward residuals are just
+    (q, k, v, out, lse)."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, chunk_q, chunk_kv, window, scale)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, q_offset, chunk_q, chunk_kv, window, scale):
+    nq, B, Cq, KV, G, Dk = q.shape[0], *q.shape[1:3], q.shape[3], q.shape[4], q.shape[5]
+    nk, Ck, Dv = k.shape[0], k.shape[2], v.shape[-1]
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    def q_chunk_body(iq, q_i):
+        q_pos = q_pos_base + iq * Cq + jnp.arange(Cq, dtype=jnp.int32)
+
+        def kv_body(carry, inputs):
+            acc, m, l = carry
+            ik, k_j, v_j = inputs
+            k_pos = ik * Ck + jnp.arange(Ck, dtype=jnp.int32)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", q_i, k_j, preferred_element_type=jnp.float32)
+            s = s * scale
+            mask = _mask_chunk(q_pos, k_pos, causal, window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(v_j.dtype), v_j, preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, Cq, KV, G, Dv), jnp.float32)
+        m0 = jnp.full((B, Cq, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Cq, KV, G), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0), (jnp.arange(nk, dtype=jnp.int32), k, v)
+        )
+        l_safe = jnp.maximum(l, 1e-30)
+        out = (acc / l_safe[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l_safe)
+        return out, lse
+
+    out, lse = jax.lax.map(
+        lambda args: q_chunk_body(*args), (jnp.arange(nq, dtype=jnp.int32), q)
+    )  # out: (nq,B,Cq,KV,G,Dv); lse: (nq,B,Cq,KV,G)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, q_offset, chunk_q, chunk_kv, window, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, chunk_q, chunk_kv, window, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, chunk_q, chunk_kv, window, scale, res, dout):
+    q, k, v, out, lse = res
+    nq, B, Cq, KV, G, Dk = q.shape[0], *q.shape[1:3], q.shape[3], q.shape[4], q.shape[5]
+    nk, Ck, Dv = k.shape[0], k.shape[2], v.shape[-1]
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # (nq,B,Cq,KV,G)
+
+    def q_chunk_body(carry, inputs):
+        dk_acc, dv_acc = carry
+        iq, q_i, do_i, lse_i, delta_i = inputs
+        q_pos = q_pos_base + iq * Cq + jnp.arange(Cq, dtype=jnp.int32)
+        do_f = do_i.astype(jnp.float32)
+
+        def kv_body(dq_i, inputs):
+            ik, k_j, v_j = inputs
+            k_pos = ik * Ck + jnp.arange(Ck, dtype=jnp.int32)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", q_i, k_j, preferred_element_type=jnp.float32) * scale
+            mask = _mask_chunk(q_pos, k_pos, causal, window)
+            p = jnp.where(mask[None, :, None, None, :], jnp.exp(s - lse_i[..., None]), 0.0)
+            dv_j = jnp.einsum("bqkgc,bqkgd->bckd", p, do_f)
+            dp = jnp.einsum("bqkgd,bckd->bqkgc", do_f, v_j.astype(jnp.float32))
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bqkgc,bckd->bqkgd", ds, k_j.astype(jnp.float32))
+            dk_j = jnp.einsum("bqkgc,bqkgd->bckd", ds, q_i.astype(jnp.float32))
+            return dq_i, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, Cq, KV, G, Dk), jnp.float32)
+        dq_i, (dk_js, dv_js) = jax.lax.scan(
+            kv_body, dq0, (jnp.arange(nk, dtype=jnp.int32), k, v)
+        )
+        return (dk_acc + dk_js, dv_acc + dv_js), dq_i
+
+    dk0 = jnp.zeros((nk, B, Ck, KV, Dk), jnp.float32)
+    dv0 = jnp.zeros((nk, B, Ck, KV, Dv), jnp.float32)
+    (dk, dv), dq = jax.lax.scan(
+        q_chunk_body,
+        (dk0, dv0),
+        (jnp.arange(nq, dtype=jnp.int32), q, dout, lse, delta),
+    )
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, Dk)
+    k: jax.Array,  # (B, Skv, KV, Dk)
+    v: jax.Array,  # (B, Skv, KV, Dv)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Memory-efficient attention; returns (B, Sq, H, Dv).
+
+    ``q_offset`` is the absolute position of q[0] (static int, for prefill
+    continuation); GQA group structure is inferred from H // KV.
+    """
+    B, Sq, H, Dk = q.shape
+    Skv, KV, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+
+    chunk_q = min(chunk_q, Sq)
+    chunk_kv = min(chunk_kv, Skv)
+    nq, nk = Sq // chunk_q, Skv // chunk_kv
+    assert nq * chunk_q == Sq and nk * chunk_kv == Skv, (Sq, Skv, chunk_q, chunk_kv)
+
+    qc = _chunk(q, chunk_q, 1).transpose(1, 0, 2, 3, 4).reshape(nq, B, chunk_q, KV, G, Dk)
+    kc = _chunk(k, chunk_kv, 1).transpose(1, 0, 2, 3, 4)  # (nk, B, Ck, KV, Dk)
+    vc = _chunk(v, chunk_kv, 1).transpose(1, 0, 2, 3, 4)  # (nk, B, Ck, KV, Dv)
+
+    out = _flash(qc, kc, vc, causal, int(q_offset), chunk_q, chunk_kv, window, scale)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dv)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, Dk)
+    k_cache: jax.Array,  # (B, S, KV, Dk)
+    v_cache: jax.Array,  # (B, S, KV, Dv)
+    length_mask: jax.Array,  # (B, S) bool — True for valid positions
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly seq-sharded) cache."""
+    B, _, H, Dk = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+    qg = q.reshape(B, KV, G, Dk)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(length_mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+
+
+def padded_heads(cfg) -> tuple[int, int]:
+    """(H_padded, G_padded): query heads padded per KV group to a multiple
+    of ``tp_pad_multiple`` so the head dim shards evenly on the model axis
+    (llava's H=56 on a 16-way axis; padded heads are masked out of the
+    output projection, so the math matches the unpadded model exactly)."""
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    mult = getattr(cfg, "tp_pad_multiple", 1)
+    G = H // KV
+    if mult <= 1 or (H % mult == 0 and G >= 1):
+        return H, G
+    G_pad = G
+    while (KV * G_pad) % mult:
+        G_pad += 1
+    return KV * G_pad, G_pad
+
+
+def head_mask(cfg) -> jax.Array | None:
+    H_pad, G_pad = padded_heads(cfg)
+    if H_pad == cfg.num_heads:
+        return None
+    G = cfg.num_heads // cfg.num_kv_heads
+    m = (jnp.arange(G_pad) < G).astype(jnp.float32)  # (G_pad,)
+    return jnp.tile(m, cfg.num_kv_heads)  # (H_pad,) kv-major head order
+
+
+def init_gqa(key, cfg) -> nn.Params:
+    d, KV, hd = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    H_pad, _ = padded_heads(cfg)
+    ks = nn.split_keys(key, 4)
+    dt = cfg.pdtype
+    p = {
+        "wq": dense_init(ks[0], d, (H_pad * hd,), dt).reshape(d, H_pad, hd),
+        "wk": dense_init(ks[1], d, (KV * hd,), dt).reshape(d, KV, hd),
+        "wv": dense_init(ks[2], d, (KV * hd,), dt).reshape(d, KV, hd),
+        "wo": dense_init(ks[3], H_pad * hd, (d,), dt).reshape(H_pad, hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def gqa_specs(cfg) -> nn.Specs:
+    kv_shardable = (cfg.num_kv_heads * cfg.head_dim) % 16 == 0  # conservative: shard flat kv dim
+    s = {
+        "wq": P(FSDP, TP, None),
+        "wk": P(FSDP, TP if cfg.num_kv_heads % 8 == 0 else None, None),
+        "wv": P(FSDP, TP if cfg.num_kv_heads % 8 == 0 else None, None),
+        "wo": P(TP, None, FSDP),
+    }
+    del kv_shardable
+    if cfg.qk_norm:
+        s["q_norm"] = P(None)
+        s["k_norm"] = P(None)
+    return s
+
+
+def gqa_forward(p, cfg, x, *, positions, mode, cache=None, cache_index=None, causal=True):
+    """mode: 'train'/'prefill' (full seq) or 'decode' (one token).
+
+    Returns (out, new_cache) — new_cache is None in train mode.
+    """
+    B, S, d = x.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    H, G = padded_heads(cfg)
+    hmask = head_mask(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # Megatron-SP: gather the (sp-sharded) seq dim here; shard heads over tp
+    # (without this GSPMD keeps seq sharded and replicates all heads — a
+    # measured 16x attention-FLOP inflation)
+    q = nn.constrain(q, ("dp", None, "tp", None))
+
+    if mode in ("train", "prefill"):
+        # repeat kv heads to full H: keeps the head dim shardable by the
+        # 16-way model axis (a (KV, G) reshape of the sharded H dim forces
+        # GSPMD reshards inside the flash loops — measured 5.9 GB/dev of
+        # spurious per-layer all-reduce on tinyllama)
+        k_full = jnp.repeat(k, G, axis=2) if G > 1 else k
+        v_full = jnp.repeat(v, G, axis=2) if G > 1 else v
+        k_full = nn.constrain(k_full, ("dp", None, "tp", None))
+        v_full = nn.constrain(v_full, ("dp", None, "tp", None))
+        out = chunked_attention(
+            q, k_full, v_full, causal=causal, chunk_q=cfg.attn_chunk,
+            chunk_kv=cfg.attn_chunk, window=cfg.window,
+        )
+        out = nn.constrain(out, ("dp", None, "tp", None))
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    elif mode == "decode":
+        # write new kv at cache_index, attend over valid positions
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        Smax = k_cache.shape[1]
+        pos_ids = jnp.arange(Smax, dtype=jnp.int32)
+        mask = (pos_ids[None, :] <= cache_index)
+        if cfg.window is not None:
+            mask &= pos_ids[None, :] > cache_index - cfg.window
+        mask = jnp.broadcast_to(mask, (B, Smax))
+        out = decode_attention(q, k_cache, v_cache, mask)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        raise ValueError(mode)
+
+    if hmask is not None:  # zero the padded query heads (exact-math padding)
+        out = out * hmask[None, None, :, None].astype(out.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def gqa_cache_shape(cfg, batch: int, max_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shp = jax.ShapeDtypeStruct((batch, max_len, kv, hd), cfg.jdtype)
+    spec = P(DP, TP, None, None)  # sequence-sharded over model (context parallel)
+    return {"k": shp, "v": shp}, {"k": spec, "v": spec}
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    z = jnp.zeros((batch, max_len, kv, hd), cfg.jdtype)
+    return {"k": z, "v": z}
+
+
+# ---------------------------------------------------------------------------
+# MLA block (deepseek-v2 style)
+
+
+def init_mla(key, cfg) -> nn.Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    lora, rope_d = cfg.kv_lora_rank, cfg.qk_rope_dim
+    nope_d, v_d = cfg.head_dim, cfg.head_dim  # qk_nope dim == v dim == head_dim (128)
+    qd = nope_d + rope_d
+    ks = nn.split_keys(key, 5)
+    dt = cfg.pdtype
+    return {
+        "wq": dense_init(ks[0], d, (H * qd,), dt).reshape(d, H, qd),
+        "w_dkv": dense_init(ks[1], d, (lora + rope_d,), dt),
+        "kv_norm": jnp.zeros((lora,), dt),
+        "w_uk": dense_init(ks[2], lora, (H * nope_d,), dt).reshape(lora, H, nope_d),
+        "w_uv": dense_init(ks[3], lora, (H * v_d,), dt).reshape(lora, H, v_d),
+        "wo": dense_init(ks[4], H * v_d, (d,), dt).reshape(H, v_d, d),
+    }
+
+
+def mla_specs(cfg) -> nn.Specs:
+    return {
+        "wq": P(FSDP, TP, None),
+        "w_dkv": P(FSDP, None),
+        "kv_norm": P(None),
+        "w_uk": P(None, TP, None),
+        "w_uv": P(None, TP, None),
+        "wo": P(TP, None, FSDP),
+    }
+
+
+def _mla_qc(p, cfg, x, positions):
+    H = cfg.num_heads
+    lora, rope_d, nope_d = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope_d], q[..., nope_d:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"].astype(x.dtype))
+    c_kv = rms_norm(c[..., :lora], p["kv_norm"])
+    k_rope = apply_rope(c[..., None, lora:], positions, cfg.rope_theta)[:, :, 0]  # (B,S,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p, cfg, x, *, positions, mode, cache=None, cache_index=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    lora, rope_d, nope_d = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.head_dim
+    scale = 1.0 / math.sqrt(nope_d + rope_d)
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, cfg, x, positions)
+
+    if mode in ("train", "prefill"):
+        # naive (up-projected) attention — compute-bound path, MXU friendly
+        k_nope = jnp.einsum("bsk,khd->bshd", c_kv, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsk,khd->bshd", c_kv, p["w_uv"].astype(x.dtype))
+        k_nope = nn.constrain(k_nope, ("dp", None, "tp", None))
+        v = nn.constrain(v, ("dp", None, "tp", None))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = nn.constrain(q, ("dp", None, "tp", None))
+        out = chunked_attention(
+            q, k, v, causal=True, chunk_q=cfg.attn_chunk, chunk_kv=cfg.attn_chunk,
+            scale=scale,
+        )
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope} if mode == "prefill" else None
+    elif mode == "decode":
+        c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_index, 0))
+        r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_index, 0))
+        Smax = c_cache.shape[1]
+        # absorbed: q_abs (B,H,lora) = q_nope @ w_uk
+        q_abs = jnp.einsum("bthd,lhd->bthl", q_nope, p["w_uk"].astype(x.dtype))[:, 0]
+        s = jnp.einsum("bhl,bsl->bhs", q_abs, c_cache, preferred_element_type=jnp.float32)
+        s += jnp.einsum("bthr,bsr->bhs", q_rope, r_cache, preferred_element_type=jnp.float32)
+        s *= scale
+        mask = jnp.arange(Smax, dtype=jnp.int32)[None, :] <= cache_index
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhs,bsl->bhl", a.astype(c_cache.dtype), c_cache, preferred_element_type=jnp.float32)
+        out = jnp.einsum("bhl,lhd->bhd", o_lat.astype(x.dtype), p["w_uv"].astype(x.dtype))[:, None]
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache}
+    else:
+        raise ValueError(mode)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def mla_cache_shape(cfg, batch: int, max_len: int):
+    lora, rope_d = cfg.kv_lora_rank, cfg.qk_rope_dim
+    return (
+        {
+            "c_kv": jax.ShapeDtypeStruct((batch, max_len, lora), cfg.jdtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_len, rope_d), cfg.jdtype),
+        },
+        {"c_kv": P(DP, TP, None), "k_rope": P(DP, TP, None)},
+    )
+
+
+def mla_init_cache(cfg, batch: int, max_len: int):
+    lora, rope_d = cfg.kv_lora_rank, cfg.qk_rope_dim
+    return {
+        "c_kv": jnp.zeros((batch, max_len, lora), cfg.jdtype),
+        "k_rope": jnp.zeros((batch, max_len, rope_d), cfg.jdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+
+
+def init_cross_attn(key, cfg) -> nn.Params:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = nn.split_keys(key, 4)
+    dt = cfg.pdtype
+    return {
+        "wq": dense_init(ks[0], d, (H * hd,), dt).reshape(d, H, hd),
+        "wk": dense_init(ks[1], d, (KV * hd,), dt).reshape(d, KV, hd),
+        "wv": dense_init(ks[2], d, (KV * hd,), dt).reshape(d, KV, hd),
+        "wo": dense_init(ks[3], H * hd, (d,), dt).reshape(H, hd, d),
+    }
+
+
+cross_attn_specs = gqa_specs  # same shapes/sharding (qk_norm absent)
+
+
+def cross_attn_forward(p, cfg, x, *, enc_kv=None, enc_out=None, src_mask=None):
+    """enc_kv: precomputed {'k','v'} (B, S_src, KV, hd); else computed from enc_out."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if enc_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(x.dtype))
+    else:
+        k, v = enc_kv["k"], enc_kv["v"]
+    if x.shape[1] == 1:
+        mask = jnp.ones((x.shape[0], k.shape[1]), bool) if src_mask is None else src_mask
+        out = decode_attention(q, k, v, mask)
+    else:
+        out = chunked_attention(q, k, v, causal=False, chunk_q=cfg.attn_chunk, chunk_kv=cfg.attn_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v}

@@ -1,0 +1,450 @@
+"""Decoder-LM assembly: heterogeneous layer patterns, scan-over-blocks, loss.
+
+A model is a repeated *pattern block* of layers (e.g. jamba: 1 attention +
+7 mamba layers, MoE on every 2nd FFN).  Per-pattern-position params are
+stacked over the number of blocks and the stack is consumed by
+``lax.scan`` (compile-time O(1) in depth; FSDP all-gathers happen per
+block inside the scan).  ``first_dense`` leading layers (deepseek-v2's
+dense layer 0) live outside the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import nn
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .nn import FSDP, TP, DP, dense_init, embed_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+
+
+def layer_pattern(cfg) -> list[tuple[str, str]]:
+    """Pattern of (mixer, ffn) for one scan block (excludes first_dense)."""
+    if cfg.ssm_kind == "rwkv6":
+        return [("rwkv", "rwkv_cm")]
+    n = cfg.attn_every if cfg.attn_every > 1 else 1
+    if cfg.moe_num_experts and cfg.moe_every > 1:
+        n = max(n, cfg.moe_every)
+    pat = []
+    for i in range(n):
+        if cfg.ssm_kind == "mamba" and cfg.attn_every > 1:
+            mixer = "attn" if i % cfg.attn_every == 0 else "mamba"
+        elif cfg.attn_impl == "mla":
+            mixer = "mla"
+        else:
+            mixer = "attn"
+        if cfg.moe_num_experts:
+            ffn = "moe" if (i % cfg.moe_every == cfg.moe_every - 1 or cfg.moe_every == 1) else "dense"
+        else:
+            ffn = "dense"
+        pat.append((mixer, ffn))
+    return pat
+
+
+def num_blocks(cfg) -> int:
+    pat = layer_pattern(cfg)
+    n = (cfg.num_layers - cfg.first_dense) // len(pat)
+    assert n * len(pat) + cfg.first_dense == cfg.num_layers, (
+        cfg.num_layers,
+        cfg.first_dense,
+        len(pat),
+    )
+    return n
+
+
+# ---------------------------------------------------------------------------
+# single layer (one (mixer, ffn) pair)
+
+
+_MIXERS = {
+    "attn": (attn.init_gqa, attn.gqa_specs),
+    "mla": (attn.init_mla, attn.mla_specs),
+    "mamba": (ssm_mod.init_mamba, ssm_mod.mamba_specs),
+    "rwkv": (rwkv_mod.init_time_mix, rwkv_mod.time_mix_specs),
+}
+
+
+def _init_ffn(key, cfg, kind: str, *, d_ff: int | None = None):
+    d = cfg.d_model
+    if kind == "moe":
+        return moe_mod.init_moe(key, cfg)
+    if kind == "rwkv_cm":
+        return rwkv_mod.init_channel_mix(key, cfg)
+    ff = d_ff or cfg.d_ff
+    ks = nn.split_keys(key, 3)
+    dt = cfg.pdtype
+    return {
+        "wi": dense_init(ks[0], d, (ff,), dt),
+        "wg": dense_init(ks[1], d, (ff,), dt),
+        "wo": dense_init(ks[2], ff, (d,), dt),
+    }
+
+
+def _ffn_specs(cfg, kind: str):
+    if kind == "moe":
+        return moe_mod.moe_specs(cfg)
+    if kind == "rwkv_cm":
+        return rwkv_mod.channel_mix_specs(cfg)
+    return {"wi": P(FSDP, TP), "wg": P(FSDP, TP), "wo": P(TP, FSDP)}
+
+
+def init_layer(key, cfg, mixer: str, ffn: str, *, d_ff: int | None = None):
+    k1, k2 = jax.random.split(key)
+    init_m, _ = _MIXERS[mixer]
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "mixer": init_m(k1, cfg),
+        "norm2": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "ffn": _init_ffn(k2, cfg, ffn, d_ff=d_ff),
+    }
+
+
+def layer_specs(cfg, mixer: str, ffn: str):
+    _, specs_m = _MIXERS[mixer]
+    return {
+        "norm1": P(None),
+        "mixer": specs_m(cfg),
+        "norm2": P(None),
+        "ffn": _ffn_specs(cfg, ffn),
+    }
+
+
+def apply_layer(p, cfg, x, mixer: str, ffn: str, *, positions, mode, cache=None, cache_index=None):
+    """Returns (x, new_cache, aux)."""
+    h = rms_norm(x, p["norm1"])
+    if mixer in ("attn", "mla"):
+        fwd = attn.gqa_forward if mixer == "attn" else attn.mla_forward
+        mix_cache = cache.get("mix") if cache else None
+        out, nc = fwd(p["mixer"], cfg, h, positions=positions, mode=mode, cache=mix_cache, cache_index=cache_index)
+    elif mixer == "mamba":
+        out, nc = ssm_mod.mamba_forward(p["mixer"], cfg, h, mode=mode, cache=cache.get("mix") if cache else None)
+    elif mixer == "rwkv":
+        out, nc = rwkv_mod.time_mix_forward(p["mixer"], cfg, h, mode=mode, cache=cache.get("mix") if cache else None)
+    else:
+        raise ValueError(mixer)
+    out = _ckpt_name(out, "mixer_out")
+    x = x + out
+    x = nn.constrain(x, ("dp", "sp", None))  # sequence-parallel boundary
+
+    h = rms_norm(x, p["norm2"])
+    aux = jnp.zeros((), jnp.float32)
+    ffn_cache = None
+    if ffn == "moe":
+        out, aux = moe_mod.moe_forward(p["ffn"], cfg, h)
+    elif ffn == "rwkv_cm":
+        out, ffn_cache = rwkv_mod.channel_mix_forward(
+            p["ffn"], cfg, h, mode=mode, cache=cache.get("ffn") if cache else None
+        )
+    else:
+        out = nn.swiglu(h, p["ffn"]["wi"], p["ffn"]["wg"], p["ffn"]["wo"])
+    out = _ckpt_name(out, "ffn_out")
+    x = x + out
+    x = nn.constrain(x, ("dp", "sp", None))  # sequence-parallel boundary
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {}
+        if nc is not None:
+            new_cache["mix"] = nc
+        if ffn_cache is not None:
+            new_cache["ffn"] = ffn_cache
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full model params
+
+
+def init_params(key, cfg) -> nn.Params:
+    pat = layer_pattern(cfg)
+    nb = num_blocks(cfg)
+    keys = nn.split_keys(key, 4)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, cfg.pdtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], cfg.d_model, (cfg.padded_vocab,), cfg.pdtype)
+
+    if cfg.first_dense:
+        fk = nn.split_keys(keys[2], cfg.first_dense)
+        mixer = "mla" if cfg.attn_impl == "mla" else "attn"
+        params["first"] = [
+            init_layer(fk[i], cfg, mixer, "dense", d_ff=cfg.first_dense_d_ff or cfg.d_ff)
+            for i in range(cfg.first_dense)
+        ]
+
+    bkeys = jax.random.split(keys[3], nb)
+    blocks = {}
+    for pos, (mixer, ffn) in enumerate(pat):
+        pkeys = jax.vmap(lambda k, i=pos: jax.random.fold_in(k, i))(bkeys)
+        blocks[f"pos{pos}"] = jax.vmap(lambda k, m=mixer, f=ffn: init_layer(k, cfg, m, f))(pkeys)
+    params["blocks"] = blocks
+    return params
+
+
+def param_specs(cfg) -> nn.Specs:
+    pat = layer_pattern(cfg)
+    specs: dict[str, Any] = {
+        "embed": P(TP, FSDP),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = P(FSDP, TP)
+    if cfg.first_dense:
+        mixer = "mla" if cfg.attn_impl == "mla" else "attn"
+        specs["first"] = [layer_specs(cfg, mixer, "dense") for _ in range(cfg.first_dense)]
+
+    def stack_spec(s):
+        return P(None, *s)
+
+    blocks = {}
+    for pos, (mixer, ffn) in enumerate(pat):
+        ls = layer_specs(cfg, mixer, ffn)
+        blocks[f"pos{pos}"] = jax.tree.map(stack_spec, ls, is_leaf=lambda x: isinstance(x, P))
+    specs["blocks"] = blocks
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def embed_tokens(params, cfg, tokens):
+    emb = params["embed"]
+    x = emb.astype(cfg.jdtype)[tokens]
+    return nn.constrain(x, ("dp", None, None))
+
+
+def _block_body(cfg, pat, mode):
+    def body(carry, xs):
+        x, aux, positions, cache_index = carry
+        bparams = xs["params"]
+        bcache = xs.get("cache")
+        new_cache = {}
+        for pos, (mixer, ffn) in enumerate(pat):
+            c = bcache[f"pos{pos}"] if bcache is not None else None
+            x, nc, a = apply_layer(
+                bparams[f"pos{pos}"], cfg, x, mixer, ffn,
+                positions=positions, mode=mode, cache=c, cache_index=cache_index,
+            )
+            aux = aux + a
+            if nc is not None:
+                new_cache[f"pos{pos}"] = nc
+        return (x, aux, positions, cache_index), (new_cache if new_cache else None)
+
+    return body
+
+
+def forward(params, cfg, *, tokens=None, embeds=None, mode="train", cache=None, cache_index=None, positions=None):
+    """Returns (logits_or_hidden, new_cache, aux_loss).
+
+    tokens: (B, S) int32 or embeds: (B, S, d).  cache: stacked cache pytree
+    {'blocks': ..., 'first': [...]} for prefill/decode.
+    """
+    pat = layer_pattern(cfg)
+    if embeds is None:
+        x = embed_tokens(params, cfg, tokens)
+    else:
+        x = embeds.astype(cfg.jdtype)
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        if mode == "decode":
+            assert cache_index is not None
+            positions = jnp.full((B, 1), cache_index, jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    aux = jnp.zeros((), jnp.float32)
+    new_first_caches = []
+    if cfg.first_dense:
+        mixer = "mla" if cfg.attn_impl == "mla" else "attn"
+        for i, lp in enumerate(params["first"]):
+            c = cache["first"][i] if cache is not None else None
+            x, nc, a = apply_layer(
+                lp, cfg, x, mixer, "dense", positions=positions, mode=mode,
+                cache=c, cache_index=cache_index,
+            )
+            aux += a
+            new_first_caches.append(nc)
+
+    body = _block_body(cfg, pat, mode)
+    if cfg.remat and mode == "train":
+        policy = (
+            jax.checkpoint_policies.save_only_these_names("mixer_out", "ffn_out")
+            if cfg.remat_policy == "save_mixer_ffn"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = {"params": params["blocks"]}
+    if cache is not None:
+        xs["cache"] = cache["blocks"]
+    ci = cache_index if cache_index is not None else jnp.zeros((), jnp.int32)
+    (x, aux, _, _), block_caches = jax.lax.scan(body, (x, aux, positions, ci), xs)
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    # logits stay in activation dtype: the f32 upcast happens inside the loss
+    # so the backward chain (incl. TP all-reduces) runs in bf16, not f32
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.jdtype))
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padded vocab columns
+        vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(vmask[None, None, :], logits, -1e9)
+    logits = nn.constrain(logits, ("dp", None, "tp"))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"blocks": block_caches}
+        if cfg.first_dense:
+            new_cache["first"] = new_first_caches
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    """Stable CE with vocab-sharded logits. labels: (B, S) int32 (-1 = pad).
+
+    f32 math internally; the incoming logits may be bf16 (their cotangent
+    then stays bf16, keeping backward collectives at half width).
+    """
+    V = logits.shape[-1]
+    if mask is None:
+        mask = labels >= 0
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), V, dtype=lf.dtype)
+    onehot = nn.constrain(onehot, ("dp", None, "tp"))  # keep vocab-sharded
+    ll = jnp.sum(lf * onehot, axis=-1)
+    ce = (lse - ll) * mask.astype(jnp.float32)
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def train_loss(params, cfg, batch):
+    logits, _, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"), embeds=batch.get("embeds"), mode="train",
+    )
+    labels = batch["labels"]
+    loss = lm_loss(logits, labels)
+    return loss + cfg.moe_aux_weight * aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+
+def _mixer_cache_fns(mixer: str):
+    return {
+        "attn": (attn.gqa_cache_shape, attn.gqa_init_cache),
+        "mla": (attn.mla_cache_shape, attn.mla_init_cache),
+        "mamba": (ssm_mod.mamba_cache_shape, ssm_mod.mamba_init_cache),
+        "rwkv": (rwkv_mod.rwkv_cache_shape, rwkv_mod.rwkv_init_cache),
+    }[mixer]
+
+
+def _layer_cache(cfg, mixer, ffn, batch, max_len, *, shapes: bool):
+    shape_fn, init_fn = _mixer_cache_fns(mixer)
+    if mixer == "rwkv":
+        # rwkv cache covers both tm (mixer) and cm (ffn shift)
+        if shapes:
+            shp, spec = shape_fn(cfg, batch, max_len)
+            return {"mix": shp["tm"], "ffn": shp["cm"]}, {"mix": spec["tm"], "ffn": spec["cm"]}
+        full = init_fn(cfg, batch, max_len)
+        return {"mix": full["tm"], "ffn": full["cm"]}
+    if shapes:
+        shp, spec = shape_fn(cfg, batch, max_len)
+        return {"mix": shp}, {"mix": spec}
+    return {"mix": init_fn(cfg, batch, max_len)}
+
+
+def cache_shapes(cfg, batch: int, max_len: int):
+    """Returns (ShapeDtypeStruct tree, PartitionSpec tree) matching forward()."""
+    pat = layer_pattern(cfg)
+    nb = num_blocks(cfg)
+
+    def stack(x):
+        return jax.ShapeDtypeStruct((nb,) + x.shape, x.dtype)
+
+    def stack_spec(s):
+        return P(None, *s)
+
+    blocks_shp, blocks_spec = {}, {}
+    for pos, (mixer, ffn) in enumerate(pat):
+        shp, spec = _layer_cache(cfg, mixer, ffn, batch, max_len, shapes=True)
+        blocks_shp[f"pos{pos}"] = jax.tree.map(stack, shp)
+        blocks_spec[f"pos{pos}"] = jax.tree.map(stack_spec, spec, is_leaf=lambda x: isinstance(x, P))
+    out_shp: dict[str, Any] = {"blocks": blocks_shp}
+    out_spec: dict[str, Any] = {"blocks": blocks_spec}
+    if cfg.first_dense:
+        mixer = "mla" if cfg.attn_impl == "mla" else "attn"
+        fs, fsp = [], []
+        for _ in range(cfg.first_dense):
+            shp, spec = _layer_cache(cfg, mixer, "dense", batch, max_len, shapes=True)
+            fs.append(shp)
+            fsp.append(spec)
+        out_shp["first"] = fs
+        out_spec["first"] = fsp
+    return out_shp, out_spec
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    pat = layer_pattern(cfg)
+    nb = num_blocks(cfg)
+
+    def stack(x):
+        return jnp.broadcast_to(x[None], (nb,) + x.shape)
+
+    blocks = {}
+    for pos, (mixer, ffn) in enumerate(pat):
+        c = _layer_cache(cfg, mixer, ffn, batch, max_len, shapes=False)
+        blocks[f"pos{pos}"] = jax.tree.map(stack, c)
+    out: dict[str, Any] = {"blocks": blocks}
+    if cfg.first_dense:
+        mixer = "mla" if cfg.attn_impl == "mla" else "attn"
+        out["first"] = [
+            _layer_cache(cfg, mixer, "dense", batch, max_len, shapes=False)
+            for _ in range(cfg.first_dense)
+        ]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (via eval_shape — no allocation)
+
+
+def count_params_analytic(cfg) -> tuple[int, int]:
+    """(total_params, active_params) — active subtracts unrouted experts."""
+    import math
+
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+    # subtract masked head padding (llava): padded q/o rows are dead weights
+    H_pad, _ = attn.padded_heads(cfg)
+    if H_pad != cfg.num_heads and cfg.attn_impl == "gqa":
+        pat = layer_pattern(cfg)
+        n_attn = sum(1 for m, _ in pat if m == "attn") * num_blocks(cfg) + cfg.first_dense
+        total -= n_attn * (H_pad - cfg.num_heads) * cfg.head_dim * cfg.d_model * 2
+    active = total
+    if cfg.moe_num_experts:
+        pat = layer_pattern(cfg)
+        n_moe = sum(1 for _, f in pat if f == "moe") * num_blocks(cfg)
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        active = total - n_moe * (cfg.moe_num_experts - cfg.moe_top_k) * per_expert
+    return total, active

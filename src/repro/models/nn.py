@@ -1,0 +1,218 @@
+"""Minimal functional param/module system with sharding-spec trees.
+
+No flax in this environment; params are plain pytrees (nested dicts of
+jnp arrays). Every ``init_*`` function has a ``*_specs`` twin returning an
+identically-structured tree of ``jax.sharding.PartitionSpec`` so the
+launcher can build NamedShardings without tracing.
+
+Axis-name conventions (resolved by :func:`repro.launch.mesh.logical_axes`):
+  - ``fsdp``  -> ('data',) or ('pod', 'data') depending on mesh
+  - ``tp``    -> 'model'
+  - ``dp``    -> batch axes ('data',) / (('pod','data'),)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict pytree of arrays
+Specs = Any  # same-structure pytree of PartitionSpec
+
+# Logical axis names used inside spec trees; they are substituted with
+# concrete mesh axis names by ``resolve_specs``.
+FSDP = "__fsdp__"
+TP = "__tp__"
+DP = "__dp__"
+
+
+def resolve_specs(tree: Specs, *, multi_pod: bool) -> Specs:
+    """Replace logical axis placeholders with concrete mesh axis names."""
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    dp = ("pod", "data") if multi_pod else ("data",)
+
+    def fix(spec):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for part in spec:
+            if part == FSDP:
+                out.append(fsdp)
+            elif part == DP:
+                out.append(dp)
+            elif part == TP:
+                out.append("model")
+            elif isinstance(part, tuple):
+                sub: list = []
+                for q in part:
+                    if q == FSDP:
+                        sub.extend(fsdp)
+                    elif q == TP:
+                        sub.append("model")
+                    else:
+                        sub.append(q)
+                out.append(tuple(sub))
+            else:
+                out.append(part)
+        return P(*out)
+
+    return jax.tree.map(fix, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(tree_specs: Specs, mesh) -> Any:
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def truncated_normal_init(key, shape, dtype, stddev):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Fan-in scaled init for a matmul with contraction dim ``in_dim``."""
+    shape = (in_dim,) + tuple(out_shape) if isinstance(out_shape, (tuple, list)) else (in_dim, out_shape)
+    stddev = 1.0 / math.sqrt(in_dim)
+    return truncated_normal_init(key, shape, dtype, stddev)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return truncated_normal_init(key, (vocab, dim), dtype, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# primitive layers (pure functions over param dicts)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, groups: int, eps: float = 1e-5):
+    """GroupNorm over the last dim split into ``groups`` (used by RWKV)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xg = x.astype(jnp.float32).reshape(*lead, groups, d // groups)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xg - mu), axis=-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(*lead, d)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, wi.astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, wg.astype(x.dtype))
+    # ff dim sharded over tp, seq gathered (Megatron-SP boundary)
+    dims = ("dp",) + (None,) * (h.ndim - 2) + ("tp",)
+    h = constrain(h, dims)
+    g = constrain(g, dims)
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("...f,fd->...d", h, wo.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., s, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hook — configured by the launcher; no-op by default so
+# model code runs on a single device (smoke tests) without a mesh.
+
+_ACT_AXES: dict[str, Any] = {"dp": None, "tp": None, "sp": None, "sizes": {}}
+
+
+def set_activation_axes(dp=None, tp=None, sp=None, sizes: dict | None = None) -> None:
+    """dp: batch axes; tp: tensor axis; sp: sequence-parallel axis (saved
+    residuals between blocks are sharded over it — Megatron-SP style)."""
+    _ACT_AXES["dp"] = dp
+    _ACT_AXES["tp"] = tp
+    _ACT_AXES["sp"] = sp
+    _ACT_AXES["sizes"] = sizes or {}
+
+
+def _axis_size(axis) -> int:
+    sizes = _ACT_AXES["sizes"]
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def constrain(x: jax.Array, dims) -> jax.Array:
+    """dims: tuple like ('dp', None, 'tp'); resolved via set_activation_axes.
+    Axes that do not evenly divide their dim are dropped (e.g. batch=1
+    decode, or a seq dim smaller than the model axis)."""
+    axes = []
+    for i, d in enumerate(dims):
+        a = _ACT_AXES.get(d) if isinstance(d, str) else None
+        if a is not None and _ACT_AXES["sizes"]:
+            if i >= x.ndim or x.shape[i] % _axis_size(a) != 0:
+                a = None
+        axes.append(a)
+    if all(a is None for a in axes):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*axes))
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params
+    )
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,241 @@
+"""RWKV6 ("Finch") time-mix + channel-mix, TPU-adapted.
+
+The reference CUDA wkv6 kernel is token-sequential; here the recurrence is
+reformulated as chunked matmuls: within a chunk of C tokens the pairwise
+decay factors exp(cum_{i-1} - cum_j) (always <= 1, so overflow-safe) are
+materialized as a (C, C, head_dim) tensor and contracted on the MXU;
+across chunks only the (B, H, K, V) state is carried.  Data-dependent decay
+(the Finch hallmark) is kept: w_t = exp(-exp(w0 + tanh(x W_a) W_b)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import nn
+from .nn import FSDP, TP, dense_init
+
+HEAD_DIM = 64
+DECAY_LORA = 64
+
+
+def num_heads(cfg) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def init_time_mix(key, cfg) -> nn.Params:
+    d = cfg.d_model
+    ks = nn.split_keys(key, 8)
+    dt = cfg.pdtype
+    return {
+        "mix_r": jnp.full((d,), 0.5, dt),
+        "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt),
+        "mix_w": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        "w_r": dense_init(ks[0], d, (d,), dt),
+        "w_k": dense_init(ks[1], d, (d,), dt),
+        "w_v": dense_init(ks[2], d, (d,), dt),
+        "w_g": dense_init(ks[3], d, (d,), dt),
+        "w_o": dense_init(ks[4], d, (d,), dt),
+        # data-dependent decay LoRA
+        "decay_a": dense_init(ks[5], d, (DECAY_LORA,), dt),
+        "decay_b": dense_init(ks[6], DECAY_LORA, (d,), dt),
+        "decay_0": jnp.full((d,), -6.0, jnp.float32),
+        "bonus_u": jnp.zeros((d,), jnp.float32),
+        "ln_scale": jnp.ones((d,), dt),
+        "ln_bias": jnp.zeros((d,), dt),
+    }
+
+
+def time_mix_specs(cfg) -> nn.Specs:
+    mat = P(FSDP, TP)
+    vec = P(None)
+    return {
+        "mix_r": vec, "mix_k": vec, "mix_v": vec, "mix_w": vec, "mix_g": vec,
+        "w_r": mat, "w_k": mat, "w_v": mat, "w_g": mat,
+        "w_o": P(TP, FSDP),
+        "decay_a": P(FSDP, None), "decay_b": P(None, TP),
+        "decay_0": vec, "bonus_u": vec, "ln_scale": vec, "ln_bias": vec,
+    }
+
+
+def init_channel_mix(key, cfg) -> nn.Params:
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = nn.split_keys(key, 3)
+    dt = cfg.pdtype
+    return {
+        "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_r": jnp.full((d,), 0.5, dt),
+        "w_k": dense_init(ks[0], d, (dff,), dt),
+        "w_v": dense_init(ks[1], dff, (d,), dt),
+        "w_r": dense_init(ks[2], d, (d,), dt),
+    }
+
+
+def channel_mix_specs(cfg) -> nn.Specs:
+    return {
+        "mix_k": P(None), "mix_r": P(None),
+        "w_k": P(FSDP, TP), "w_v": P(TP, FSDP), "w_r": P(FSDP, TP),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: concat prev token state then drop last. x: (B,S,d), prev: (B,d)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, xs, m):
+    return x + (xs - x) * m.astype(x.dtype)
+
+
+def _wkv_chunk(r, k, v, lw, u, state):
+    """One chunk of the wkv recurrence.
+
+    r,k,v: (B,C,H,hd); lw: (B,C,H,hd) log-decay (<=0, f32); u: (H,hd) bonus;
+    state: (B,H,hd,hd) f32 — state[b,h,c_k,c_v] = sum_j k_j[c_k] D_j v_j[c_v].
+    Returns (out (B,C,H,hd), new_state).
+    """
+    B, C, H, hd = r.shape
+    rf, kf, vf = r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    cum = jnp.cumsum(lw, axis=1)  # inclusive
+    cum_prev = cum - lw  # exclusive (cum_{i-1})
+
+    # inter-chunk: o_i += (r_i * exp(cum_prev_i)) @ state
+    r_dec = rf * jnp.exp(cum_prev)
+    o_inter = jnp.einsum("bchk,bhkv->bchv", r_dec, state)
+
+    # intra-chunk: A_ij = sum_c r_i[c] k_j[c] exp(cum_prev_i[c]-cum_j[c]) (j<i)
+    #              A_ii = sum_c r_i[c] k_j[c] u[c]
+    E = jnp.exp(
+        jnp.clip(cum_prev[:, :, None] - cum[:, None, :], -60.0, 0.0)
+    )  # (B,C,C,H,hd), <=1
+    tri = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :]).astype(jnp.float32)
+    A = jnp.einsum("bihc,bjhc,bijhc->bhij", rf, kf, E) * tri[None, None]
+    diag = jnp.einsum("bihc,bihc,hc->bhi", rf, kf, u)
+    A = A + jnp.eye(C, dtype=jnp.float32)[None, None] * diag[..., None]
+    o_intra = jnp.einsum("bhij,bjhv->bihv", A, vf)
+
+    # state update: S' = exp(cum_C) * S + sum_j (k_j * exp(cum_C - cum_j)) v_j^T
+    cum_all = cum[:, -1]  # (B,H,hd)
+    k_dec = kf * jnp.exp(jnp.clip(cum_all[:, None] - cum, -60.0, 0.0))
+    state_new = jnp.exp(cum_all)[..., None] * state + jnp.einsum("bchk,bchv->bhkv", k_dec, vf)
+
+    out = (o_inter + o_intra).astype(r.dtype)
+    return out, state_new
+
+
+def time_mix_forward(p, cfg, x, *, mode, cache=None):
+    """x: (B,S,d). cache: {'shift': (B,d), 'state': (B,H,hd,hd)}."""
+    B, S, d = x.shape
+    H = num_heads(cfg)
+    prev = cache["shift"] if cache is not None else jnp.zeros((B, d), x.dtype)
+    xs = _shift(x, prev) if S > 1 else prev[:, None, :]
+
+    xr = _mix(x, xs, p["mix_r"]) ; xk = _mix(x, xs, p["mix_k"])
+    xv = _mix(x, xs, p["mix_v"]) ; xw = _mix(x, xs, p["mix_w"])
+    xg = _mix(x, xs, p["mix_g"])
+
+    r = nn.constrain(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype)), ("dp", None, "tp"))
+    k = nn.constrain(jnp.einsum("bsd,de->bse", xk, p["w_k"].astype(x.dtype)), ("dp", None, "tp"))
+    v = nn.constrain(jnp.einsum("bsd,de->bse", xv, p["w_v"].astype(x.dtype)), ("dp", None, "tp"))
+    g = jax.nn.silu(nn.constrain(jnp.einsum("bsd,de->bse", xg, p["w_g"].astype(x.dtype)), ("dp", None, "tp")))
+
+    # data-dependent decay (Finch): lw = -exp(w0 + tanh(xw A) B)  (log w, <= 0)
+    dec = jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["decay_a"].astype(x.dtype))),
+        p["decay_b"].astype(x.dtype),
+    ).astype(jnp.float32)
+    lw = -jnp.exp(p["decay_0"][None, None] + dec)  # (B,S,d) f32, <= 0
+
+    def heads(t):
+        return t.reshape(B, S, H, HEAD_DIM)
+
+    r, k, v, lw = heads(r), heads(k), heads(v), heads(lw)
+    u = p["bonus_u"].reshape(H, HEAD_DIM).astype(jnp.float32)
+
+    state0 = (
+        cache["state"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((B, H, HEAD_DIM, HEAD_DIM), jnp.float32)
+    )
+
+    if mode == "decode":
+        # exact single-step recurrence
+        rf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+        w1 = jnp.exp(lw[:, 0])  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+        o = jnp.einsum("bhk,bhkv->bhv", rf, state0 + u[None, :, :, None] * kv)
+        state_new = w1[..., None] * state0 + kv
+        out = o.reshape(B, 1, d).astype(x.dtype)
+    else:
+        import math as _math
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk:
+            chunk = _math.gcd(S, chunk)
+        nck = S // chunk
+
+        def rs(t):
+            return t.reshape(B, nck, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        def body(st, inp):
+            r_i, k_i, v_i, lw_i = inp
+            o, st2 = _wkv_chunk(r_i, k_i, v_i, lw_i, u, st)
+            return st2, o
+
+        # remat: never store the (B,C,C,H,hd) intra-chunk decay tensor
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        state_new, outs = jax.lax.scan(body, state0, (rs(r), rs(k), rs(v), rs(lw)))
+        out = outs.swapaxes(0, 1).reshape(B, S, d)
+
+    out = nn.group_norm(out, p["ln_scale"], p["ln_bias"], groups=H)
+    out = out * g
+    out = jnp.einsum("bsd,de->bse", out, p["w_o"].astype(x.dtype))
+    new_cache = {"shift": x[:, -1, :], "state": state_new}
+    return out, new_cache
+
+
+def channel_mix_forward(p, cfg, x, *, mode, cache=None):
+    B, S, d = x.shape
+    prev = cache["shift"] if cache is not None else jnp.zeros((B, d), x.dtype)
+    xs = _shift(x, prev) if S > 1 else prev[:, None, :]
+    xk = _mix(x, xs, p["mix_k"])
+    xr = _mix(x, xs, p["mix_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(x.dtype))
+    k = nn.constrain(k, ("dp", None, "tp"))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype)))
+    out = rr * kv
+    return out, {"shift": x[:, -1, :]}
+
+
+def rwkv_cache_shape(cfg, batch: int, max_len: int):
+    d, H = cfg.d_model, num_heads(cfg)
+    del max_len
+    shapes = {
+        "tm": {
+            "shift": jax.ShapeDtypeStruct((batch, d), cfg.jdtype),
+            "state": jax.ShapeDtypeStruct((batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+        },
+        "cm": {"shift": jax.ShapeDtypeStruct((batch, d), cfg.jdtype)},
+    }
+    specs = {
+        "tm": {"shift": P(nn.DP, None), "state": P(nn.DP, TP, None, None)},
+        "cm": {"shift": P(nn.DP, None)},
+    }
+    return shapes, specs
+
+
+def rwkv_init_cache(cfg, batch: int, max_len: int):
+    d, H = cfg.d_model, num_heads(cfg)
+    del max_len
+    return {
+        "tm": {
+            "shift": jnp.zeros((batch, d), cfg.jdtype),
+            "state": jnp.zeros((batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+        },
+        "cm": {"shift": jnp.zeros((batch, d), cfg.jdtype)},
+    }

@@ -1,0 +1,180 @@
+"""Mamba selective-SSM block (jamba's mixer), TPU-adapted.
+
+The CUDA selective-scan kernel is replaced by a chunked formulation:
+``lax.scan`` over sequence chunks with a ``lax.associative_scan`` (log-depth)
+inside each chunk — the carry is the (B, d_inner, d_state) SSM state.  This
+keeps the working set to one chunk (VMEM-friendly when the same blocking is
+used by a Pallas port) and exposes large elementwise/matmul ops to the VPU/
+MXU instead of a token-sequential loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import nn
+from .nn import FSDP, TP, dense_init
+
+
+def d_inner(cfg) -> int:
+    return cfg.expand * cfg.d_model
+
+
+def dt_rank(cfg) -> int:
+    return max(16, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg) -> nn.Params:
+    d, di, ds, dc, dr = cfg.d_model, d_inner(cfg), cfg.d_state, cfg.d_conv, dt_rank(cfg)
+    ks = nn.split_keys(key, 6)
+    dt = cfg.pdtype
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], d, (2 * di,), dt),
+        "conv_w": dense_init(ks[1], dc, (di,), dt),  # depthwise causal conv
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, (dr + 2 * ds,), dt),
+        "dt_w": dense_init(ks[3], dr, (di,), dt),
+        "dt_b": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01) ~= -4.6
+        "A_log": jnp.log(A).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, (d,), dt),
+    }
+
+
+def mamba_specs(cfg) -> nn.Specs:
+    return {
+        "in_proj": P(FSDP, TP),
+        "conv_w": P(None, TP),
+        "conv_b": P(TP),
+        "x_proj": P(TP, None),
+        "dt_w": P(None, TP),
+        "dt_b": P(TP),
+        "A_log": P(TP, None),
+        "D": P(TP),
+        "out_proj": P(TP, FSDP),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,di); w: (dc,di) depthwise; left-padded causal conv."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(dc))
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(p, cfg, xz):
+    """From in_proj output produce (x_raw, x_conv, z, dt, A, Bm, Cm)."""
+    di, ds, dr = d_inner(cfg), cfg.d_state, dt_rank(cfg)
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    x = jax.nn.silu(_causal_conv(x_raw, p["conv_w"].astype(x_raw.dtype), p["conv_b"].astype(x_raw.dtype)))
+    proj = jnp.einsum("bsi,ik->bsk", x, p["x_proj"].astype(x.dtype))
+    dt_in, Bm, Cm = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_w"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_b"].astype(jnp.float32)
+    )  # (B,S,di) f32
+    A = -jnp.exp(p["A_log"])  # (di, ds), negative
+    return x_raw, x, z, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_forward(p, cfg, x_in, *, mode, cache=None):
+    """x_in: (B,S,d). Returns (out, new_cache)."""
+    B, S, d = x_in.shape
+    di, ds, dc = d_inner(cfg), cfg.d_state, cfg.d_conv
+    xz = jnp.einsum("bsd,de->bse", x_in, p["in_proj"].astype(x_in.dtype))
+    xz = nn.constrain(xz, ("dp", None, "tp"))
+
+    if mode == "decode":
+        # single token: use cached conv inputs + state
+        x, z = jnp.split(xz, 2, axis=-1)
+        conv_hist = jnp.concatenate([cache["conv"], x], axis=1)  # (B, dc, di)
+        w = p["conv_w"].astype(x.dtype)
+        xc = jnp.einsum("bci,ci->bi", conv_hist, w) + p["conv_b"].astype(x.dtype)
+        xc = jax.nn.silu(xc)[:, None, :]
+        proj = jnp.einsum("bsi,ik->bsk", xc, p["x_proj"].astype(x.dtype))
+        dr = dt_rank(cfg)
+        dt_in, Bm, Cm = jnp.split(proj, [dr, dr + ds], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,ri->bsi", dt_in, p["dt_w"].astype(x.dtype)).astype(jnp.float32)
+            + p["dt_b"].astype(jnp.float32)
+        )
+        A = -jnp.exp(p["A_log"])
+        a = jnp.exp(dt[:, 0, :, None] * A[None])  # (B,di,ds)
+        bu = dt[:, 0, :, None] * Bm[:, 0, None, :].astype(jnp.float32) * xc[:, 0, :, None].astype(jnp.float32)
+        h = a * cache["h"] + bu
+        y = jnp.einsum("bis,bs->bi", h, Cm[:, 0].astype(jnp.float32)) + p["D"] * xc[:, 0].astype(jnp.float32)
+        y = y[:, None, :].astype(x_in.dtype) * jax.nn.silu(z)
+        out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x_in.dtype))
+        new_cache = {"conv": conv_hist[:, 1:], "h": h}
+        return out, new_cache
+
+    x_raw, x, z, dt, A, Bm, Cm = _ssm_inputs(p, cfg, xz)
+    import math as _math
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk:
+        chunk = _math.gcd(S, chunk)
+    nck = S // chunk
+
+    xf = x.astype(jnp.float32)
+    # per-chunk tensors: (nc, B, C, ...)
+    def rs(t):
+        return t.reshape(B, nck, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c, B_c, C_c, x_c = rs(dt), rs(Bm), rs(Cm), rs(xf)
+
+    def chunk_body(h, inp):
+        dt_i, B_i, C_i, x_i = inp  # (B,C,di),(B,C,ds),(B,C,ds),(B,C,di)
+        a = jnp.exp(dt_i[..., None] * A[None, None])  # (B,C,di,ds)
+        bu = dt_i[..., None] * B_i[:, :, None, :] * x_i[..., None]  # (B,C,di,ds)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_sc, b_sc = jax.lax.associative_scan(comb, (a, bu), axis=1)
+        hs = a_sc * h[:, None] + b_sc  # (B,C,di,ds)
+        y = jnp.einsum("bcis,bcs->bci", hs, C_i) + p["D"][None, None] * x_i
+        return hs[:, -1], y
+
+    h0 = cache["h"] if (cache is not None and mode == "prefill") else jnp.zeros((B, di, ds), jnp.float32)
+    # remat the chunk body: backward replays a chunk instead of saving the
+    # (B, C, d_inner, d_state) decay/scan tensors for every chunk
+    body = jax.checkpoint(chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    h_last, ys = jax.lax.scan(body, h0, (dt_c, B_c, C_c, x_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(x_in.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x_in.dtype))
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {
+            "conv": x_raw[:, S - (dc - 1) :, :].astype(cfg.jdtype)
+            if dc > 1
+            else jnp.zeros((B, 0, di), cfg.jdtype),
+            "h": h_last,
+        }
+    return out, new_cache
+
+
+def mamba_cache_shape(cfg, batch: int, max_len: int):
+    di, ds, dc = d_inner(cfg), cfg.d_state, cfg.d_conv
+    del max_len
+    return (
+        {
+            "conv": jax.ShapeDtypeStruct((batch, dc - 1, di), cfg.jdtype),
+            "h": jax.ShapeDtypeStruct((batch, di, ds), jnp.float32),
+        },
+        {"conv": P(nn.DP, None, TP), "h": P(nn.DP, TP, None)},
+    )
+
+
+def mamba_init_cache(cfg, batch: int, max_len: int):
+    di, ds, dc = d_inner(cfg), cfg.d_state, cfg.d_conv
+    del max_len
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), cfg.jdtype),
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+    }

@@ -1,0 +1,223 @@
+"""Optimizers: sgd/momentum, adamw (+fp32 master), adafactor (factored).
+
+Pure pytree-function style: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (new_params, new_state)``;
+``opt.state_specs(param_specs, param_shapes) -> state spec tree`` (for the
+launcher to build NamedShardings without tracing).
+
+adamw keeps fp32 master weights + fp32 (m, v) — params may be stored bf16
+for compute; updates happen on the master and the bf16 copy is re-derived.
+adafactor keeps factored second moments (row/col, ~1 byte/param) and is
+used for the >100B architectures (mistral-123b, jamba-398b) where adamw
+states would not leave activation headroom (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    state_specs: Callable[[Any, Any], Any]
+
+
+def _map_like_params(fn, params, *rest):
+    return jax.tree.map(fn, params, *rest)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        st: dict = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g, p: momentum * m
+                + g.astype(jnp.float32)
+                + weight_decay * p.astype(jnp.float32),
+                state["mu"], grads, params,
+            )
+            newp = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu)
+            return newp, {"step": step, "mu": mu}
+        newp = jax.tree.map(
+            lambda p, g: (
+                p.astype(jnp.float32)
+                - lr * (g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype),
+            params, grads,
+        )
+        return newp, {"step": step}
+
+    def state_specs(pspecs, pshapes):
+        st = {"step": P()}
+        if momentum:
+            st["mu"] = pspecs
+        return st
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# AdamW with fp32 master weights
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    keep_master: bool = True,
+) -> Optimizer:
+    def init(params):
+        st = {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+        if keep_master:
+            # explicit copy: when params are already f32 an astype would
+            # alias the same buffer and break donation (donate-twice error)
+            st["master"] = jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+            )
+        return st
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads
+        )
+        base = state["master"] if keep_master else jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        new_master = jax.tree.map(
+            lambda b, mm, vv: b - lr * (mm / c1 / (jnp.sqrt(vv / c2) + eps) + weight_decay * b),
+            base, m, v,
+        )
+        newp = jax.tree.map(lambda p, b: b.astype(p.dtype), params, new_master)
+        newst = {"step": step, "m": m, "v": v}
+        if keep_master:
+            newst["master"] = new_master
+        return newp, newst
+
+    def state_specs(pspecs, pshapes):
+        st = {"step": P(), "m": pspecs, "v": pspecs}
+        if keep_master:
+            st["master"] = pspecs
+        return st
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+
+
+def _factored_dims(shape, min_size):
+    if len(shape) < 2:
+        return None
+    dims = sorted(range(len(shape)), key=lambda i: shape[i])[-2:]
+    r, c = sorted(dims)
+    if shape[r] < min_size or shape[c] < min_size:
+        return None
+    return r, c
+
+
+def adafactor(
+    lr: float = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    def init(params):
+        def per_param(p):
+            f = _factored_dims(p.shape, min_dim_size_to_factor)
+            if f is None:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            r, c = f
+            vr = jnp.zeros(tuple(s for i, s in enumerate(p.shape) if i != c), jnp.float32)
+            vc = jnp.zeros(tuple(s for i, s in enumerate(p.shape) if i != r), jnp.float32)
+            return {"vr": vr, "vc": vc}
+
+        return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(per_param, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            f = _factored_dims(p.shape, min_dim_size_to_factor)
+            g2 = jnp.square(g) + eps
+            if f is None:
+                vn = beta * v["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(vn, eps))
+                v_new = {"v": vn}
+            else:
+                r, c = f  # r < c
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=c)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=r)
+                v_new = {"vr": vr, "vc": vc}
+                red = jnp.mean(vr, axis=r, keepdims=True)  # vr still has axis r at index r
+                vr_n = vr / jnp.maximum(red, eps)
+                vhat = jnp.expand_dims(vr_n, c) * jnp.expand_dims(vc, r)
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * p32
+            return (p32 - lr * u).astype(p.dtype), v_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(*t) for t in zip(flat_p, flat_g, flat_v)]
+        newp = jax.tree.unflatten(treedef, [o[0] for o in out])
+        newv = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return newp, {"step": step, "v": newv}
+
+    def state_specs(pspecs, pshapes):
+        def per_param(spec, shp):
+            f = _factored_dims(shp.shape, min_dim_size_to_factor)
+            parts = list(spec) + [None] * (len(shp.shape) - len(spec))
+            if f is None:
+                return {"v": P(*parts)}
+            r, c = f
+            return {
+                "vr": P(*(x for i, x in enumerate(parts) if i != c)),
+                "vc": P(*(x for i, x in enumerate(parts) if i != r)),
+            }
+
+        v = jax.tree.map(per_param, pspecs, pshapes, is_leaf=lambda x: isinstance(x, P))
+        return {"step": P(), "v": v}
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(cfg) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return adamw(cfg.learning_rate, weight_decay=cfg.weight_decay)
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr=cfg.learning_rate, weight_decay=cfg.weight_decay)
+    if cfg.optimizer == "sgd":
+        return sgd(cfg.learning_rate, momentum=0.9, weight_decay=cfg.weight_decay)
+    raise ValueError(cfg.optimizer)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches run on 1 device; only
+# launch/dryrun.py forces 512 placeholder devices (in a subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

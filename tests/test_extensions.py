@@ -1,0 +1,73 @@
+"""Paper appendix extensions: Algorithm 2 multicast (App. N-B) and
+heterogeneous logical nodes (App. L)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.congestion import make_env
+from repro.core.multicast import MulticastPlanner, enumerate_subsets
+from repro.core.nodeid import IdSpace
+from repro.core.overlay import MultiRingOverlay
+from repro.core.forest import Forest
+
+
+def test_enumerate_subsets_counts():
+    s = enumerate_subsets(4, max_size=2)
+    assert s.shape == (4 + 6, 4)
+    assert set(np.asarray(s.sum(-1))) == {1.0, 2.0}
+
+
+def test_multicast_planner_policies_valid_and_improve():
+    env = make_env(5, seed=2)
+    p = MulticastPlanner(num_nodes=24, num_paths=5, max_subset=2, tau=8, seed=0)
+    key = jax.random.key(0)
+    rewards_first, rewards_last = None, None
+    for ep in range(15):
+        key, k1, k2 = jax.random.split(key, 3)
+        actions = p.sample_actions(k1)
+        rewards = p.rewards(env, actions, k2)
+        if ep == 0:
+            rewards_first = float(jnp.mean(rewards))
+        rewards_last = float(jnp.mean(rewards))
+        p.update(actions, rewards)
+        np.testing.assert_allclose(np.asarray(p.pi.sum(-1)), 1.0, atol=1e-4)
+        assert bool(jnp.all(p.pi >= 0))
+    assert rewards_last >= rewards_first - 0.05  # learning not diverging
+    usage = p.subset_usage()
+    assert usage.shape == (2,) and abs(usage.sum() - 1.0) < 1e-3
+
+
+def test_multicast_rewards_bounded_by_subset_size():
+    env = make_env(4, seed=1)
+    p = MulticastPlanner(num_nodes=6, num_paths=4, max_subset=2, tau=4)
+    key = jax.random.key(1)
+    actions = p.sample_actions(key)
+    r = p.rewards(env, actions, jax.random.fold_in(key, 1))
+    assert bool(jnp.all(r >= 0)) and bool(jnp.all(r <= 2.0))  # [0, F], F=2
+
+
+def test_logical_nodes_attract_proportional_masters():
+    """App. L Fig 25: a physical node mapped to more logical P2P nodes
+    hosts proportionally more masters."""
+    space = IdSpace(zone_bits=1, suffix_bits=22)
+    ov = MultiRingOverlay(space, base_bits=4, seed=0)
+    rng = np.random.default_rng(0)
+    # 20 small nodes (1 unit) + 5 big nodes (8 units each)
+    small, big = [], []
+    for i in range(20):
+        small += ov.join_weighted(0, 1, coord=rng.uniform(0, 10, 2))
+    for i in range(5):
+        big += ov.join_weighted(0, 8, coord=rng.uniform(0, 10, 2))
+    f = Forest(ov)
+    for i in range(400):
+        f.create_tree(f"app-{i}", salt=str(i))
+    masters = f.masters_per_node()
+    small_masters = sum(masters.get(n, 0) for n in small)
+    big_masters = sum(masters.get(n, 0) for n in big)
+    # big nodes hold 40/60 of logical ids -> expect ~2x the masters
+    assert big_masters > small_masters
+    # per PHYSICAL node: big nodes get several-fold more
+    per_small = small_masters / 20
+    per_big = big_masters / 5
+    assert per_big > 3 * per_small

@@ -1,0 +1,126 @@
+"""Layer 2: pub/sub forest — trees, AD tree, balance, API verbs."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.api import TotoroSystem
+from repro.core.forest import Forest
+from repro.core.nodeid import IdSpace, abs_ring_distance
+from repro.core.overlay import MultiRingOverlay
+
+
+def build(n=2000, seed=0):
+    space = IdSpace(zone_bits=3, suffix_bits=24)
+    ov = MultiRingOverlay(space, base_bits=4, seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        ov.join_random(int(rng.integers(0, 8)), coord=rng.uniform(0, 100, 2))
+    return ov, rng
+
+
+def test_tree_root_is_rendezvous_node():
+    ov, rng = build()
+    f = Forest(ov)
+    tree = f.create_tree("my-app")
+    space = ov.space
+    zone = space.zone_of(tree.root)
+    suf = space.suffix_of(tree.app_id)
+    members = ov.zone_members[zone]
+    best = min(members, key=lambda s: abs_ring_distance(suf, s, space.suffix_space))
+    assert space.suffix_of(tree.root) == best
+
+
+def test_subscribers_all_reach_root():
+    ov, rng = build()
+    f = Forest(ov)
+    tree = f.create_tree("app")
+    subs = [ov.nodes()[rng.integers(ov.num_nodes)] for _ in range(300)]
+    for s in subs:
+        f.subscribe(tree.app_id, s)
+    for s in tree.members:
+        path = tree.path_to_root(s)
+        assert path[-1] == tree.root
+
+
+def test_tree_depth_log_and_fanout_bounded():
+    ov, rng = build(n=4000)
+    f = Forest(ov)
+    tree = f.create_tree("app")
+    for _ in range(800):
+        f.subscribe(tree.app_id, ov.nodes()[rng.integers(ov.num_nodes)])
+    assert tree.depth() <= math.ceil(math.log(4000 / 8, 16)) + ov.space.zone_bits + 4
+    # fanout bounded by the digit base (with leaf-set/root slack)
+    assert tree.fanout() <= (1 << ov.b) * 4
+
+
+def test_masters_evenly_distributed():
+    """Fig 5(b): with many apps, ~99.5% of nodes host <= 3 roots."""
+    ov, rng = build(n=1000)
+    f = Forest(ov)
+    for i in range(500):
+        f.create_tree(f"app-{i}")
+    per_node = f.masters_per_node()
+    heavy = sum(1 for v in per_node.values() if v > 3)
+    assert heavy / 1000 < 0.02
+    assert max(per_node.values()) < 12
+
+
+def test_unsubscribe_prunes_leaves():
+    ov, rng = build(n=500)
+    f = Forest(ov)
+    tree = f.create_tree("app")
+    subs = [ov.nodes()[rng.integers(ov.num_nodes)] for _ in range(50)]
+    for s in subs:
+        f.subscribe(tree.app_id, s)
+    before = len(tree.nodes())
+    for s in subs:
+        f.unsubscribe(tree.app_id, s)
+    assert len(tree.nodes()) < before
+    assert not tree.members
+
+
+def test_ad_tree_advertise_and_discover():
+    ov, rng = build(n=800)
+    f = Forest(ov)
+    for i in range(10):
+        f.create_tree(f"fl-app-{i}", meta={"name": f"fl-app-{i}", "model": "mlp"})
+    reg = f.discover(ov.nodes()[5])
+    names = {v["name"] for v in reg.values()}
+    assert names == {f"fl-app-{i}" for i in range(10)}
+    # AD tree membership stays small: masters only (paper: M + N' << N)
+    assert f.ad_tree is not None
+    assert len(f.ad_tree.nodes()) < 10 * 8  # M apps x O(log N) interior
+
+
+def test_api_verbs_end_to_end():
+    sys = TotoroSystem(zone_bits=2, suffix_bits=20, seed=3)
+    rng = np.random.default_rng(0)
+    nodes = [sys.Join("10.0.0.1", 9000 + i, site=i % 4, coord=rng.uniform(0, 10, 2)) for i in range(200)]
+    received = []
+    h = sys.CreateTree(
+        "sentiment",
+        selection_fn=lambda n: n % 2 == 0,  # client selection customization
+        on_broadcast=lambda app, obj: received.append(obj),
+    )
+    ok = [sys.Subscribe(h.app_id, n) for n in nodes[:40]]
+    assert any(ok) and not all(ok)  # selection_fn rejected odd nodes
+    stats = sys.Broadcast(h.app_id, np.ones(10))
+    assert stats["time_ms"] > 0 and stats["bytes"] > 0
+    assert received  # callback fired per worker
+    updates = {n: np.full(10, float(i)) for i, n in enumerate(sorted(h.tree.members)[:4])}
+    agg = sys.Aggregate(h.app_id, updates)
+    np.testing.assert_allclose(agg["result"], np.mean([v for v in updates.values()], axis=0))
+    reg = sys.Discover(nodes[-1])
+    assert any(m.get("name") == "sentiment" for m in reg.values())
+
+
+def test_zone_restricted_tree_stays_in_zone():
+    ov, rng = build(n=1000)
+    f = Forest(ov)
+    tree = f.create_tree("local-app", restrict_zone=2)
+    assert ov.space.zone_of(tree.root) == 2
+    zone2 = [n for n in ov.nodes() if ov.space.zone_of(n) == 2]
+    for s in zone2[:30]:
+        f.subscribe(tree.app_id, s)
+    assert all(ov.space.zone_of(n) == 2 for n in tree.nodes())

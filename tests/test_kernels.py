@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode
+on CPU; TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("C", [2, 4, 8, 16, 32])
+@pytest.mark.parametrize("L", [1024, 4096, 333])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_aggregate_sweep(C, L, dtype):
+    key = jax.random.key(C * L)
+    g = jax.random.normal(key, (C, L), dtype)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (C,))
+    np.testing.assert_allclose(
+        np.asarray(ops.tree_aggregate(g, w)),
+        np.asarray(ref.tree_aggregate_ref(g, w)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_tree_aggregate_pytree_matches_fedavg():
+    from repro.fl.aggregation import fedavg
+
+    key = jax.random.key(0)
+    updates = [
+        {"a": jax.random.normal(jax.random.fold_in(key, i), (40, 7)),
+         "b": jax.random.normal(jax.random.fold_in(key, 10 + i), (13,))}
+        for i in range(5)
+    ]
+    w = [1.0, 2.0, 3.0, 0.5, 1.5]
+    agg = ops.tree_aggregate_pytree(updates, np.asarray(w) / np.sum(w))
+    expect = fedavg(updates, w)
+    for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("R", [64, 256, 777])
+def test_quantize_bit_exact_and_bounded(R):
+    key = jax.random.key(R)
+    x = jax.random.normal(key, (R, 256)) * 5
+    rnd = jax.random.uniform(jax.random.fold_in(key, 1), (R, 256))
+    q, s = ops.qsgd_quantize(x, rnd)
+    qr, sr = ref.quantize_ref(x, rnd)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # dequant error bounded by one quantization step per element
+    deq = ops.qsgd_dequantize(q, s)
+    assert bool(jnp.all(jnp.abs(deq - x) <= s + 1e-6))
+
+
+def test_quantize_unbiased_with_uniform_noise():
+    """E[dequant] == x under stochastic rounding (QSGD property)."""
+    key = jax.random.key(3)
+    x = jax.random.normal(key, (4, 256))
+    outs = []
+    for i in range(400):
+        rnd = jax.random.uniform(jax.random.fold_in(key, i), (4, 256))
+        q, s = ops.qsgd_quantize(x, rnd)
+        outs.append(ops.qsgd_dequantize(q, s))
+    bias = jnp.mean(jnp.stack(outs), 0) - x
+    assert float(jnp.max(jnp.abs(bias))) < 0.02
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 8), st.integers(0, 999))
+def test_policy_update_kernel_matches_alg1(K, tau, seed):
+    from repro.core.pathplan import algorithm1_episode, candidate_policy_set
+
+    key = jax.random.key(seed)
+    N = 64
+    pi = jax.random.dirichlet(key, jnp.ones(K), (N,)).astype(jnp.float32)
+    mask = jnp.ones((N, K), bool)
+    cand = candidate_policy_set(K, seed=seed)
+    actions = jax.random.randint(jax.random.fold_in(key, 1), (N, tau), 0, K)
+    rewards = jax.random.uniform(jax.random.fold_in(key, 2), (N, tau))
+    rsums = (jax.nn.one_hot(actions, K) * rewards[..., None]).sum(1)
+    out_k = ops.policy_update(pi, mask, cand, rsums, tau=tau, alpha=0.8, beta=0.4)
+    out_a = algorithm1_episode(pi, mask, cand, actions, rewards, tau=tau, alpha=0.8, beta=0.4)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_a), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape,dtype", [((1000,), jnp.float32), ((64, 100), jnp.bfloat16), ((7, 3, 11), jnp.float32)])
+def test_fused_update_sweep(shape, dtype):
+    key = jax.random.key(hash(shape) % 2**31)
+    w = jax.random.normal(key, shape, dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), shape, dtype)
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), shape, dtype)
+    out = ops.fused_update(w, g, w0, lr=0.05, mu=0.1, wd=0.01)
+    expect = ref.fused_update_ref(w, g, w0, 0.05, 0.1, 0.01)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=1e-2, atol=1e-2
+    )
+    assert out.dtype == w.dtype

@@ -1,0 +1,197 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs (assignment requirement), plus
+decode-vs-train consistency for every cache family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import encdec, lm
+
+ALL_ARCHS = list(configs.ARCH_IDS)
+
+
+def _batch(cfg, key, B=2, S=32):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.is_encoder_decoder:
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model)) * 0.3
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    elif cfg.embed_inputs:
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model)) * 0.3
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    batch["labels"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    model = encdec if cfg.is_encoder_decoder else lm
+    params = model.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    loss_fn = (
+        (lambda p, b: encdec.forward_train(p, cfg, b))
+        if cfg.is_encoder_decoder
+        else (lambda p, b: lm.train_loss(p, cfg, b))
+    )
+    (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(ce) > 0
+    gn = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    # one SGD step moves the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+    (loss2, _) = loss_fn(params2, batch)[0], None
+    assert float(loss2[0] if isinstance(loss2, tuple) else loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes(arch):
+    cfg = configs.get_reduced(arch)
+    B, S = 2, 16
+    if cfg.is_encoder_decoder:
+        params = encdec.init_params(jax.random.key(0), cfg)
+        enc = encdec.encode(params, cfg, jnp.zeros((B, S, cfg.d_model)))
+        assert enc.shape == (B, S, cfg.d_model)
+        return
+    params = lm.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1), B=B, S=S)
+    logits, _, _ = lm.forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"), mode="train"
+    )
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+DECODE_ARCHS = [
+    "tinyllama-1.1b",  # GQA
+    "qwen3-8b",  # qk_norm
+    "deepseek-v2-lite-16b",  # MLA absorbed decode + MoE + first_dense
+    "rwkv6-7b",  # wkv state
+    "jamba-1.5-large-398b",  # mamba conv/ssm state + attention hybrid
+    "moonshot-v1-16b-a3b",  # MoE
+    "llava-next-34b",  # padded heads
+]
+
+
+def _merge(full, pre):
+    def f(a, b):
+        if a.shape == b.shape:
+            return b.astype(a.dtype)
+        return jax.lax.dynamic_update_slice(a, b.astype(a.dtype), (0,) * a.ndim)
+
+    return jax.tree.map(f, full, pre)
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_train_forward(arch):
+    cfg = configs.get_reduced(arch).replace(capacity_factor=64.0)  # dropless MoE
+    params = lm.init_params(jax.random.key(0), cfg)
+    B, S, P0 = 2, 32, 24
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    logits_full, _, _ = lm.forward(params, cfg, tokens=tokens, mode="train")
+    cache = _merge(
+        lm.init_cache(cfg, B, S),
+        lm.forward(params, cfg, tokens=tokens[:, :P0], mode="prefill")[1],
+    )
+    errs = []
+    for t in range(P0, S):
+        lt, cache, _ = lm.forward(
+            params, cfg, tokens=tokens[:, t : t + 1], mode="decode",
+            cache=cache, cache_index=jnp.asarray(t, jnp.int32),
+        )
+        errs.append(float(jnp.max(jnp.abs(lt[:, 0] - logits_full[:, t]))))
+    assert max(errs) < 5e-4, (arch, max(errs))
+
+
+def test_encdec_decode_matches_train():
+    cfg = configs.get_reduced("seamless-m4t-medium")
+    params = encdec.init_params(jax.random.key(0), cfg)
+    B, Ss, St, P0 = 2, 24, 16, 12
+    embeds = jax.random.normal(jax.random.key(2), (B, Ss, cfg.d_model)) * 0.3
+    tokens = jax.random.randint(jax.random.key(3), (B, St), 0, cfg.vocab_size)
+    enc_out = encdec.encode(params, cfg, embeds)
+    tgt = params["embed"][tokens]
+    x_full, _ = encdec.decode_stack(params, cfg, tgt, mode="train", enc_out=enc_out)
+    from repro.models.nn import rms_norm
+
+    logits_full = jnp.einsum(
+        "bsd,dv->bsv", rms_norm(x_full, params["final_norm"]), params["head"]
+    )
+    cache = _merge(
+        encdec.init_cache(cfg, B, St, Ss),
+        encdec.decode_stack(params, cfg, tgt[:, :P0], mode="prefill", enc_out=enc_out)[1],
+    )
+    errs = []
+    for t in range(P0, St):
+        cache, lt = encdec.decode_step(params, cfg, cache, tokens[:, t : t + 1], jnp.asarray(t, jnp.int32))
+        errs.append(float(jnp.max(jnp.abs(lt[:, 0] - logits_full[:, t]))))
+    assert max(errs) < 5e-4
+
+
+def test_full_configs_match_assignment():
+    """Exact published dims (the spec table)."""
+    spec = {
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "rwkv6-7b": (32, 4096, None, None, 14336, 65536),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+    }
+    for name, (L, d, H, KV, ff, V) in spec.items():
+        cfg = configs.get_config(name)
+        assert cfg.num_layers == L and cfg.d_model == d and cfg.d_ff == ff
+        assert cfg.vocab_size == V
+        if H is not None:
+            assert cfg.num_heads == H and cfg.num_kv_heads == KV
+    # MoE details
+    j = configs.get_config("jamba-1.5-large-398b")
+    assert (j.moe_num_experts, j.moe_top_k, j.attn_every) == (16, 2, 8)
+    m = configs.get_config("moonshot-v1-16b-a3b")
+    assert (m.moe_num_experts, m.moe_top_k) == (64, 6)
+    d2 = configs.get_config("deepseek-v2-lite-16b")
+    assert (d2.kv_lora_rank, d2.moe_num_experts, d2.moe_top_k, d2.moe_num_shared) == (512, 64, 6, 2)
+
+
+def test_param_counts_near_nameplate():
+    expect = {
+        "mistral-large-123b": 123e9,
+        "deepseek-67b": 67e9,
+        "tinyllama-1.1b": 1.1e9,
+        "rwkv6-7b": 7.5e9,
+        "jamba-1.5-large-398b": 398e9,
+        "llava-next-34b": 34e9,
+    }
+    for name, n in expect.items():
+        total, _ = lm.count_params_analytic(configs.get_config(name))
+        assert abs(total - n) / n < 0.15, (name, total)
+
+
+def test_llava_padded_heads_exact_math():
+    """Masked head padding must not change outputs vs an unpadded model."""
+    cfg = configs.get_reduced("llava-next-34b")  # tp_pad_multiple=16 -> pads
+    cfg_nopad = cfg.replace(tp_pad_multiple=1)
+    from repro.models import attention as A
+
+    H_pad, _ = A.padded_heads(cfg)
+    assert H_pad > cfg.num_heads  # padding active in the reduced config
+    p = A.init_gqa(jax.random.key(0), cfg)
+    p_nopad = A.init_gqa(jax.random.key(0), cfg_nopad)
+    # copy real heads (kv-major order) from the padded init
+    G = cfg.num_heads // cfg.num_kv_heads
+    G_pad = H_pad // cfg.num_kv_heads
+    idx = jnp.concatenate([jnp.arange(G) + kv * G_pad for kv in range(cfg.num_kv_heads)])
+    p_nopad = dict(p_nopad, wq=p["wq"][:, idx], wk=p["wk"], wv=p["wv"], wo=p["wo"][idx])
+    x = jax.random.normal(jax.random.key(2), (2, 16, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None], (2, 16))
+    out_pad, _ = A.gqa_forward(p, cfg, x, positions=pos, mode="train")
+    out_ref, _ = A.gqa_forward(p_nopad, cfg_nopad, x, positions=pos, mode="train")
+    np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out_ref), atol=1e-5)

@@ -1,0 +1,109 @@
+"""Optimizers + sharded integration (subprocess small-mesh dry-run)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+
+
+def _quad_params():
+    return {"w": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray([[0.5, -0.5]] * 2)}
+
+
+def _grads(params):
+    return jax.tree.map(lambda p: 2 * p, params)  # grad of sum(p^2)
+
+
+def test_adamw_reduces_quadratic():
+    opt = optim.adamw(lr=0.05)
+    params = _quad_params()
+    state = opt.init(params)
+    for _ in range(100):
+        params, state = opt.update(_grads(params), state, params)
+    assert float(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(params))) < 0.2
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = optim.adamw(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([1.0])}
+    state = opt.init(params)
+    newp, _ = opt.update({"w": jnp.asarray([0.5])}, state, params)
+    # bias-corrected first step = lr * g/|g| = lr
+    np.testing.assert_allclose(float(newp["w"][0]), 1.0 - 0.1, atol=1e-4)
+
+
+def test_adafactor_factored_states_and_descent():
+    opt = optim.adafactor(lr=0.05, min_dim_size_to_factor=2)
+    params = {"w": jnp.ones((128, 256)), "v": jnp.ones((5,))}
+    state = opt.init(params)
+    assert set(state["v"]["w"].keys()) == {"vr", "vc"}
+    assert state["v"]["w"]["vr"].shape == (128,)
+    assert state["v"]["w"]["vc"].shape == (256,)
+    assert set(state["v"]["v"].keys()) == {"v"}
+    loss0 = float(jnp.sum(jnp.square(params["w"])))
+    for _ in range(20):
+        params, state = opt.update(_grads(params), state, params)
+    assert float(jnp.sum(jnp.square(params["w"]))) < loss0
+
+
+def test_adafactor_state_specs_drop_factored_axis():
+    from jax.sharding import PartitionSpec as P
+
+    opt = optim.adafactor(min_dim_size_to_factor=2)
+    pspecs = {"w": P("data", "model")}
+    pshapes = {"w": jax.ShapeDtypeStruct((128, 256), jnp.float32)}
+    ss = opt.state_specs(pspecs, pshapes)
+    assert ss["v"]["w"]["vr"] == P("data")
+    assert ss["v"]["w"]["vc"] == P("model")
+
+
+def test_sgd_momentum():
+    opt = optim.sgd(lr=0.1, momentum=0.9)
+    params = _quad_params()
+    state = opt.init(params)
+    for _ in range(50):
+        params, state = opt.update(_grads(params), state, params)
+    assert float(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(params))) < 0.5
+
+
+DRYRUN_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.launch import mesh as mesh_mod, specs as specs_mod, hlo
+mesh = mesh_mod.make_test_mesh(multi_pod={mp})
+cell = specs_mod.build_cell("tinyllama-1.1b", "{shape}", mesh, aggregation={agg!r})
+lowered = specs_mod.lower_cell(cell, mesh)
+compiled = lowered.compile()
+mod = hlo.analyze_module(compiled.as_text())
+assert mod.flops > 0
+print("OK", compiled.memory_analysis().argument_size_in_bytes)
+"""
+
+
+@pytest.mark.parametrize(
+    "mp,shape,agg",
+    [
+        (False, "train_4k", None),
+        (True, "train_4k", None),
+        (True, "train_4k", "totoro_tree_q8"),
+        (True, "train_4k", "xla_auto"),
+        (False, "decode_32k", None),
+    ],
+)
+def test_small_mesh_dryrun_subprocess(mp, shape, agg):
+    """The dry-run machinery on an 8-device test mesh (subprocess so the
+    forced device count never leaks into this process)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = DRYRUN_CODE.format(mp=mp, shape=shape, agg=agg)
+    p = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=900
+    )
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "OK" in p.stdout

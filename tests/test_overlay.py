@@ -1,0 +1,147 @@
+"""Layer 1: multi-ring overlay — routing, convergence, isolation, tables."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nodeid import IdSpace, abs_ring_distance, sha1_id
+from repro.core.overlay import MultiRingOverlay, distributed_binning
+
+
+def build(n=2000, zones=8, seed=0, b=4, suffix_bits=24):
+    space = IdSpace(zone_bits=int(math.log2(zones)), suffix_bits=suffix_bits)
+    ov = MultiRingOverlay(space, base_bits=b, seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        ov.join_random(int(rng.integers(0, zones)), coord=rng.uniform(0, 100, 2))
+    return ov, rng
+
+
+def test_sha1_ids_uniform():
+    space = 1 << 32
+    ids = [sha1_id(f"app-{i}", 32) for i in range(2000)]
+    assert len(set(ids)) == 2000  # collision-free at this scale
+    # roughly uniform: each quartile gets 25% +- 5%
+    qs = np.histogram(ids, bins=4, range=(0, space))[0]
+    assert all(abs(q / 2000 - 0.25) < 0.05 for q in qs)
+
+
+def test_route_terminates_at_numerically_closest():
+    ov, rng = build()
+    space = ov.space
+    for _ in range(50):
+        src = ov.nodes()[rng.integers(ov.num_nodes)]
+        key = int(rng.integers(0, 1 << space.total_bits))
+        res = ov.route(src, key)
+        dest = res.dest
+        zone = space.zone_of(dest)
+        suf = space.suffix_of(key)
+        members = ov.zone_members[zone]
+        best = min(members, key=lambda s: abs_ring_distance(suf, s, space.suffix_space))
+        assert space.suffix_of(dest) == best
+
+
+def test_route_convergence_single_destination():
+    ov, rng = build()
+    key = int(rng.integers(0, 1 << ov.space.total_bits))
+    dests = {ov.route(ov.nodes()[rng.integers(ov.num_nodes)], key).dest for _ in range(60)}
+    assert len(dests) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**48 - 1), st.integers(0, 10**6))
+def test_route_hop_bound_property(key, src_seed):
+    """O(log N): hops <= ceil(log_2^b N_zone) + zone hops + leaf slack."""
+    ov = test_route_hop_bound_property.ov
+    rng = np.random.default_rng(src_seed)
+    src = ov.nodes()[rng.integers(ov.num_nodes)]
+    res = ov.route(src, key % (1 << ov.space.total_bits))
+    n_zone = max(len(m) for m in ov.zone_members.values())
+    bound = math.ceil(math.log(n_zone, 2**ov.b)) + ov.space.zone_bits + 3
+    assert res.hops <= bound, (res.hops, bound)
+
+
+test_route_hop_bound_property.ov = build(n=3000)[0]
+
+
+def test_hops_scale_logarithmically():
+    means = []
+    for n in (500, 4000):
+        ov, rng = build(n=n)
+        hops = [
+            ov.route(
+                ov.nodes()[rng.integers(ov.num_nodes)],
+                int(rng.integers(0, 1 << ov.space.total_bits)),
+            ).hops
+            for _ in range(200)
+        ]
+        means.append(np.mean(hops))
+    assert means[1] < means[0] * 3  # 8x nodes -> far less than 8x hops
+    assert means[1] <= math.log(4000 / 8, 2**4) + 5
+
+
+def test_administrative_isolation_blocks_cross_zone():
+    ov, rng = build()
+    src = ov.nodes()[0]
+    zone = ov.space.zone_of(src)
+    other_zone = (zone + 1) % ov.space.num_zones
+    key = ov.space.make(other_zone, 12345)
+    res = ov.route(src, key, restrict_zone=zone)
+    # either delivered within the zone or blocked at the boundary
+    assert all(ov.space.zone_of(n) == zone for n in res.path) or res.blocked
+    # unrestricted: reaches the other zone
+    res2 = ov.route(src, key)
+    assert ov.space.zone_of(res2.dest) == other_zone
+
+
+def test_routing_table_materialization_matches_rule():
+    ov, _ = build(n=500, zones=4)
+    node = ov.nodes()[3]
+    table = ov.routing_table_of(node)
+    assert len(table["level1"]) == ov.space.zone_bits
+    # level-1 entry i points into zone (P_x + 2^{i-1}) mod 2^m (or its live successor)
+    zone = ov.space.zone_of(node)
+    for i, entry in enumerate(table["level1"], start=1):
+        expect_zone = ov.nearest_zone((zone + (1 << (i - 1))) % ov.space.num_zones)
+        assert ov.space.zone_of(entry) == expect_zone
+    # level-2 rows have 2^b - 1 entries
+    assert all(len(row) == (1 << ov.b) - 1 for row in table["level2"])
+
+
+def test_leaf_and_neighborhood_sets():
+    ov, _ = build(n=300, zones=4)
+    node = ov.nodes()[10]
+    leafs = ov.leaf_set(node)
+    assert node not in leafs and len(leafs) > 0
+    assert all(ov.space.zone_of(l) == ov.space.zone_of(node) for l in leafs)
+    nbrs = ov.neighborhood_set(node)
+    assert len(nbrs) == ov.neighborhood_size
+    # neighborhood is by physical distance: the closest node is in it
+    cx, cy = ov.coords[node]
+    closest = min(
+        (n for n in ov.alive if n != node),
+        key=lambda n: (ov.coords[n][0] - cx) ** 2 + (ov.coords[n][1] - cy) ** 2,
+    )
+    assert closest in nbrs
+
+
+def test_churn_routes_survive_failures():
+    ov, rng = build(n=1000)
+    nodes = ov.nodes()
+    for n in nodes[:: 10]:  # fail 10%
+        ov.fail(n)
+    for _ in range(50):
+        src = ov.nodes()[rng.integers(ov.num_nodes)]
+        key = int(rng.integers(0, 1 << ov.space.total_bits))
+        res = ov.route(src, key)
+        assert all(n in ov.alive for n in res.path)
+
+
+def test_distributed_binning_locality():
+    rng = np.random.default_rng(0)
+    # two well-separated clusters -> different bins, same-cluster same bin
+    c1 = rng.normal((0, 0), 1.0, (50, 2))
+    c2 = rng.normal((100, 100), 1.0, (50, 2))
+    bins = distributed_binning(np.vstack([c1, c2]), num_landmarks=4, seed=1)
+    assert len(set(bins[:50]) & set(bins[50:])) == 0

@@ -1,0 +1,118 @@
+"""Game-theoretic path planning (Algorithm 1): paper-exact example,
+simplex invariants, regret behavior, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.congestion import CongestionEnv, make_env
+from repro.core.pathplan import (
+    BanditPlanner,
+    GameTheoreticPlanner,
+    OptPlanner,
+    algorithm1_episode,
+    candidate_policy_set,
+    nash_regret_step,
+    run_planner,
+)
+
+
+def test_appendix_e_numerical_example_exact():
+    """Paper Appendix E: pi=[0.5,0.5], tau=2, rewards (m1:0.4, m2:0.8),
+    Delta = {[.6,.4],[.5,.5],[.3,.7],[.1,.9]}, alpha=beta=0.5 -> [0.2,0.8]."""
+    cand = jnp.array([[0.6, 0.4], [0.5, 0.5], [0.3, 0.7], [0.1, 0.9]], jnp.float32)
+    pi = jnp.array([[0.5, 0.5]], jnp.float32)
+    out = algorithm1_episode(
+        pi, jnp.ones((1, 2), bool), cand,
+        jnp.array([[0, 1]]), jnp.array([[0.4, 0.8]], jnp.float32),
+        tau=2, alpha=0.5, beta=0.5,
+    )
+    np.testing.assert_allclose(np.asarray(out[0]), [0.2, 0.8], atol=1e-6)
+
+
+def test_appendix_e_intermediate_quantities():
+    """Determinants 0.24/0.25/0.21/0.09 -> rho=[.1,.9]; grad=[0.4,0.8];
+    inner products 0.56/0.60/0.68/0.76 -> pi~=[.1,.9]."""
+    cand = np.array([[0.6, 0.4], [0.5, 0.5], [0.3, 0.7], [0.1, 0.9]])
+    dets = cand.prod(axis=1)
+    np.testing.assert_allclose(dets, [0.24, 0.25, 0.21, 0.09], atol=1e-9)
+    assert dets.argmin() == 3
+    grad = np.array([0.4, 0.8])  # (1/tau)*sum 1[p_t=p] r_t / pi(p), pi=0.5
+    np.testing.assert_allclose(cand @ grad, [0.56, 0.60, 0.68, 0.76], atol=1e-9)
+    assert (cand @ grad).argmax() == 3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(2, 12),  # K paths
+    st.integers(1, 16),  # tau
+    st.floats(0.1, 0.95),
+    st.floats(0.05, 0.95),
+    st.integers(0, 10_000),
+)
+def test_update_stays_in_simplex(K, tau, alpha, beta, seed):
+    key = jax.random.key(seed)
+    N = 17
+    pi = jax.random.dirichlet(key, jnp.ones(K), (N,)).astype(jnp.float32)
+    cand = candidate_policy_set(K, seed=seed)
+    actions = jax.random.randint(jax.random.fold_in(key, 1), (N, tau), 0, K)
+    rewards = jax.random.uniform(jax.random.fold_in(key, 2), (N, tau))
+    out = algorithm1_episode(
+        pi, jnp.ones((N, K), bool), cand, actions, rewards,
+        tau=tau, alpha=alpha, beta=beta,
+    )
+    assert bool(jnp.all(out >= -1e-6))
+    np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, atol=1e-5)
+    assert bool(jnp.all(out > 0))  # Theorem 1 precondition: no zero element
+
+
+def test_masked_hops_get_zero_mass():
+    K, N = 6, 4
+    mask = jnp.array([[True, True, True, False, False, False]] * N)
+    pi = jnp.where(mask, 1 / 3, 0.0).astype(jnp.float32)
+    cand = candidate_policy_set(K)
+    actions = jnp.zeros((N, 3), jnp.int32)
+    rewards = jnp.ones((N, 3))
+    out = algorithm1_episode(pi, mask, cand, actions, rewards, tau=3, alpha=0.6, beta=0.5)
+    assert bool(jnp.all(out[:, 3:] == 0))
+    np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_planner_reduces_nash_regret_vs_bandit():
+    """Fig 13: Totoro+ reaches lower Nash regret than the congestion-blind
+    bandit; OPT is the floor."""
+    env = make_env(6, seed=3)
+    N, episodes = 48, 30
+    gt = run_planner(GameTheoreticPlanner(N, 6, tau=8, alpha=0.9, beta=0.5, seed=0), env, episodes)
+    bd = run_planner(BanditPlanner(N, 6, tau=8), env, episodes)
+    opt = run_planner(OptPlanner(env, N, tau=8), env, episodes)
+    tail = slice(-10, None)
+    gt_r = np.mean(gt["nash_regret"][tail])
+    bd_r = np.mean(bd["nash_regret"][tail])
+    opt_r = np.mean(opt["nash_regret"][tail])
+    assert gt_r < bd_r, (gt_r, bd_r)
+    assert opt_r <= gt_r + 0.05
+
+
+def test_planner_balances_congestion_lower_latency():
+    """Figs 11/14: Totoro+ spreads load -> lower cumulative latency and
+    more even selection frequencies than the bandit."""
+    env = make_env(6, seed=5)
+    N, episodes = 48, 25
+    gt = run_planner(GameTheoreticPlanner(N, 6, tau=8, seed=1), env, episodes)
+    bd = run_planner(BanditPlanner(N, 6, tau=8), env, episodes)
+    assert gt["cum_latency_ms"][-1] < bd["cum_latency_ms"][-1]
+    # selection frequencies stay spread (no path starved — Fig 14)
+    assert float(np.min(gt["selection_freq"])) > 0.02
+
+
+def test_congestion_env_bandwidth_sharing():
+    env = make_env(3, seed=0)
+    a_lone = jnp.array([0, 1, 2])
+    a_cong = jnp.array([0, 0, 0])
+    lat_lone = env.latency_ms(a_lone)
+    lat_cong = env.latency_ms(a_cong)
+    assert float(lat_cong[0]) > float(lat_lone[0])  # sharing slows everyone
+    # mean_reward decreases in k
+    assert env.mean_reward(0, 1) >= env.mean_reward(0, 3) >= env.mean_reward(0, 9)
