@@ -74,4 +74,25 @@ def run() -> list[str]:
     ):
         t, _ = timeit(fn)
         out.append(row(f"fig16_{name}", t * 1e6, f"n={N}"))
+
+    # batched level aggregation: one kernel launch for a whole tree level
+    # of G (parent, children) groups vs G separate aggregator calls.
+    # (CPU numbers are interpret-mode — the launch-count reduction is the
+    # TPU story; the row records both times plus the dispatch ratio.)
+    G, C, L = 32, 8, 8192
+    key = jax.random.key(1)
+    g = jax.random.normal(key, (G, C, L), jnp.float32)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (G, C), jnp.float32)
+    t_b, _ = timeit(lambda: jax.block_until_ready(kops.tree_aggregate_groups(g, w)))
+    t_f, _ = timeit(
+        lambda: [jax.block_until_ready(kops.tree_aggregate(g[i], w[i])) for i in range(G)]
+    )
+    out.append(
+        row(
+            "level_agg_batched_g32",
+            t_b * 1e6,
+            f"launches=1_vs_{G};batched_ms={t_b*1e3:.2f};"
+            f"per_group_ms={t_f*1e3:.2f};mode=interpret",
+        )
+    )
     return out

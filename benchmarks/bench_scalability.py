@@ -62,4 +62,24 @@ def run() -> list[str]:
         [len(overlay.zone_members[z]) for z in zones],
     )[0, 1]
     out.append(row("fig5c_masters_scale_workload", 0.0, f"zone_corr={corr:.3f}"))
+
+    # (e) aggregation-schedule depth: the engine executes one batched
+    # kernel call per level, so O(log N) levels = O(log N) sequential
+    # dissemination/aggregation steps regardless of subscriber count
+    forest3 = Forest(overlay)
+    rng2 = np.random.default_rng(1)
+    all_nodes = overlay.nodes()
+    for n_sub in (100, 400, 1600):
+        t_ = forest3.create_tree(f"sched-{n_sub}")
+        for w in rng2.choice(all_nodes, size=n_sub, replace=False):
+            forest3.subscribe(t_.app_id, int(w))
+        sched = t_.aggregation_schedule()
+        groups = sum(len(l) for l in sched)
+        out.append(
+            row(
+                f"fig5e_agg_schedule_n{n_sub}",
+                0.0,
+                f"levels={len(sched)};groups={groups};log2n={math.log2(n_sub):.1f}",
+            )
+        )
     return out

@@ -42,4 +42,18 @@ def run() -> list[str]:
         prev = per_node
         for h in list(sys_.apps.values()):
             h.traffic_bytes = 0.0
+
+    # aggregation traffic now follows the tree level-by-level: per-level
+    # bytes/latency come from the hierarchical kernel schedule
+    h = sys_.apps[sys_.forest.app_names["t50-0"]]
+    members = sorted(h.tree.members)[:20]
+    stats = sys_.Aggregate(h.app_id, {w: payload for w in members})
+    out.append(
+        row(
+            "fig7_agg_per_level",
+            0.0,
+            f"levels={len(stats['levels'])};agg_bytes={stats['bytes']:.0f};"
+            f"agg_ms={stats['time_ms']:.1f}",
+        )
+    )
     return out

@@ -62,10 +62,12 @@ class TotoroSystem:
         return self.overlay.join_random(site % self.space.num_zones, coord, bandwidth)
 
     def CreateTree(self, app_name: str, *, restrict_zone=None, fanout_bits=None, **hooks) -> AppHandle:
-        """Application owner creates a dataflow tree (+ configures hooks)."""
-        if fanout_bits is not None:
-            self.overlay.b = fanout_bits
-        tree = self.forest.create_tree(app_name, restrict_zone=restrict_zone)
+        """Application owner creates a dataflow tree (+ configures hooks).
+        ``fanout_bits`` is per-tree: it changes only this app's JOIN
+        routing (digit base 2^b), never the shared overlay tables."""
+        tree = self.forest.create_tree(
+            app_name, restrict_zone=restrict_zone, fanout_bits=fanout_bits
+        )
         h = AppHandle(app_id=tree.app_id, name=app_name, tree=tree, **hooks)
         self.apps[tree.app_id] = h
         return h
@@ -93,25 +95,51 @@ class TotoroSystem:
         if h.on_broadcast:
             received = h.decompress_fn(payload) if h.decompress_fn else payload
             for w in sorted(tree.members):
-                h.on_broadcast(app_id, received)
+                h.on_broadcast(app_id, w, received)
         return {"time_ms": time_ms, "bytes": nbytes * n_edges, "edges": n_edges}
 
-    def Aggregate(self, app_id: int, objects: dict[int, Any], weights=None) -> dict:
-        """Aggregate worker updates up the tree (level-by-level)."""
+    def Aggregate(
+        self,
+        app_id: int,
+        objects: dict[int, Any],
+        weights=None,
+        *,
+        hierarchical: bool = True,
+        use_kernel: bool = True,
+    ) -> dict:
+        """Aggregate worker updates up the tree, level-by-level.
+
+        The default path executes the dataflow tree's aggregation schedule
+        bottom-up: each level is one batched ``tree_aggregate`` Pallas
+        kernel call combining every (parent, children) group, so traffic
+        and latency metrics follow the tree hop-by-hop and the computed
+        result is the hierarchy's (it matches the flat weighted mean).
+        A custom ``aggregate_fn`` hook (or ``hierarchical=False``) falls
+        back to the flat reference reduction.
+        """
         h = self.apps[app_id]
         tree = h.tree
-        agg_fn = h.aggregate_fn or _weighted_mean
         weights = weights or {n: 1.0 for n in objects}
         payload = objects
         if h.privacy_fn:
             payload = {n: h.privacy_fn(v) for n, v in payload.items()}
-        result = agg_fn(list(payload.values()), [weights[n] for n in payload])
-        nbytes = sum(_nbytes(v) for v in payload.values())
+
+        if h.aggregate_fn is not None or not hierarchical or not payload:
+            agg_fn = h.aggregate_fn or _weighted_mean
+            result = agg_fn(list(payload.values()), [weights[n] for n in payload])
+            nbytes = sum(_nbytes(v) for v in payload.values())
+            time_ms = tree.aggregation_time(self.overlay)
+            levels: list[dict] = []
+        else:
+            result, levels = _aggregate_hierarchical(
+                self.overlay, tree, payload, weights, use_kernel=use_kernel
+            )
+            nbytes = sum(lv["bytes"] for lv in levels)
+            time_ms = sum(lv["time_ms"] for lv in levels)
         h.traffic_bytes += nbytes
-        time_ms = tree.aggregation_time(self.overlay)
         if h.on_aggregate:
             h.on_aggregate(app_id, result)
-        return {"time_ms": time_ms, "bytes": nbytes, "result": result}
+        return {"time_ms": time_ms, "bytes": nbytes, "result": result, "levels": levels}
 
     def Discover(self, node: int) -> dict[int, dict]:
         """AD-tree application discovery (journal addition, Appendix A)."""
@@ -157,3 +185,93 @@ def _weighted_mean(values, weights):
         return sum(wi * np.asarray(l, np.float64) for wi, l in zip(w, leaves))
 
     return jax.tree.map(avg, *values)
+
+
+def _aggregate_hierarchical(overlay, tree, payload, weights, *, use_kernel=True):
+    """Execute the tree's aggregation schedule bottom-up.
+
+    Each node carries a partial *weighted sum* of its subtree's updates
+    (plus the subtree weight); every level is one batched kernel call over
+    its (parent, children) groups, and the master normalizes once at the
+    root — associativity makes this bit-compatible (up to f32 reduction
+    order) with the flat weighted mean.
+
+    Returns (result_pytree, levels) where levels[i] records that level's
+    group count, per-edge traffic and modeled latency.
+    """
+    import jax
+
+    from repro.kernels import ops as kops
+
+    first = next(iter(payload.values()))
+    leaves0, treedef = jax.tree.flatten(first)
+    shapes = [np.shape(l) for l in leaves0]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    L = sum(sizes)
+
+    def flatten(obj):
+        ls = jax.tree.leaves(obj)
+        return np.concatenate([np.ravel(np.asarray(l)).astype(np.float32) for l in ls])
+
+    # node -> [partial weighted-sum vec, kernel weight, subtree weight]
+    state: dict[int, list] = {
+        n: [flatten(v), float(weights.get(n, 1.0)), float(weights.get(n, 1.0))]
+        for n, v in payload.items()
+    }
+    vec_bytes = 4.0 * L
+    levels: list[dict] = []
+
+    def run_level(groups, depth):
+        """groups: list of (parent, contributors) where each contributor is
+        a node currently in `state`; executes them as one batched call."""
+        cmax = max(len(c) for _, c in groups)
+        g = np.zeros((len(groups), cmax, L), np.float32)
+        w = np.zeros((len(groups), cmax), np.float32)
+        for i, (_, contrib) in enumerate(groups):
+            for j, c in enumerate(contrib):
+                g[i, j] = state[c][0]
+                w[i, j] = state[c][1]
+        if use_kernel:
+            out = np.asarray(kops.tree_aggregate_groups(g, w))
+        else:
+            out = (g.astype(np.float64) * w[..., None]).sum(axis=1)
+        lvl_bytes, lvl_ms = 0.0, 0.0
+        for i, (parent, contrib) in enumerate(groups):
+            subtree_w = sum(state[c][2] for c in contrib)
+            for c in contrib:
+                if c != parent:
+                    lvl_bytes += vec_bytes
+                    lvl_ms = max(lvl_ms, overlay.rtt(c, parent))
+                del state[c]
+            state[parent] = [out[i], 1.0, subtree_w]
+        levels.append(
+            {"level": depth, "groups": len(groups), "bytes": lvl_bytes, "time_ms": lvl_ms}
+        )
+
+    for sched in tree.aggregation_schedule():
+        groups = []
+        for parent, children in sched:
+            contrib = [c for c in children if c in state]
+            if parent in state:
+                contrib.append(parent)  # parent's own update merges here
+            if contrib:
+                groups.append((parent, contrib))
+        if groups:
+            run_level(groups, depth=len(levels))
+    # final merge at the root: needed for stragglers outside the tree,
+    # and for any still-raw leaf payload (kernel weight not yet applied
+    # — e.g. a root-only payload on a childless tree)
+    if (
+        len(state) != 1
+        or tree.root not in state
+        or state[tree.root][1] != 1.0
+    ):
+        run_level([(tree.root, sorted(state))], depth=len(levels))
+
+    vec, _, total_w = state[tree.root]
+    mean = np.asarray(vec, np.float64) / max(total_w, 1e-12)
+    out_leaves, off = [], 0
+    for s, sz in zip(shapes, sizes):
+        out_leaves.append(mean[off : off + sz].reshape(s))
+        off += sz
+    return jax.tree.unflatten(treedef, out_leaves), levels

@@ -59,6 +59,25 @@ class DataflowTree:
 
     # -- dataflow schedules (latency model supplied by the overlay) ----------
 
+    def aggregation_schedule(self) -> list[list[tuple[int, list[int]]]]:
+        """Per-level batches of (parent, children) groups, deepest level
+        first, so partial aggregates flow leaves -> root: every internal
+        node appears exactly once as a parent, and each level's groups
+        are independent (executable as one batched kernel call)."""
+        by_depth: dict[int, list[tuple[int, list[int]]]] = {}
+        for parent, kids in self.children.items():
+            if kids:
+                by_depth.setdefault(self.depth_of(parent), []).append(
+                    (parent, sorted(kids))
+                )
+        return [
+            sorted(by_depth[d]) for d in sorted(by_depth, reverse=True)
+        ]
+
+    def broadcast_schedule(self) -> list[list[tuple[int, list[int]]]]:
+        """The same level batches root -> leaves (dissemination order)."""
+        return list(reversed(self.aggregation_schedule()))
+
     def broadcast_time(self, overlay: MultiRingOverlay, payload_ms: float = 0.0) -> float:
         """Model dissemination root->leaves: max over leaves of path latency."""
         t = 0.0
@@ -96,11 +115,20 @@ class Forest:
         zone = self.overlay.nearest_zone(space.zone_of(key))
         return self.overlay._zone_closest(zone, space.suffix_of(key))
 
-    def create_tree(self, name: str, *, salt: str = "", restrict_zone: int | None = None, meta=None) -> DataflowTree:
+    def create_tree(
+        self,
+        name: str,
+        *,
+        salt: str = "",
+        restrict_zone: int | None = None,
+        fanout_bits: int | None = None,
+        meta=None,
+    ) -> DataflowTree:
         app_id = self.app_id_of(name, salt)
         root = self._rendezvous(app_id, restrict_zone)
         tree = DataflowTree(app_id=app_id, root=root, meta=meta or {"name": name})
         tree.meta.setdefault("restrict_zone", restrict_zone)
+        tree.meta.setdefault("fanout_bits", fanout_bits)
         self.trees[app_id] = tree
         self.app_names[name] = app_id
         self._advertise(app_id, tree.meta)
@@ -123,7 +151,12 @@ class Forest:
     def subscribe(self, app_id: int, node: int) -> RouteResult:
         """JOIN: route toward AppId; graft onto the first tree node hit."""
         tree = self.trees[app_id]
-        res = self.overlay.route(node, app_id, restrict_zone=tree.meta.get("restrict_zone"))
+        res = self.overlay.route(
+            node,
+            app_id,
+            restrict_zone=tree.meta.get("restrict_zone"),
+            base_bits=tree.meta.get("fanout_bits"),
+        )
         tree.members.add(node)
         self._graft_path(tree, res.path)
         return res

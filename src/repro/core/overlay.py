@@ -166,27 +166,31 @@ class MultiRingOverlay:
 
     # -- routing -------------------------------------------------------------
 
-    def _digit_prefix_len(self, a: int, b_: int) -> int:
+    def _digit_prefix_len(self, a: int, b_: int, b: int | None = None) -> int:
         """Common prefix length in base-2^b digits, MSB first."""
+        b = b or self.b
         n = self.space.suffix_bits
-        rows = (n + self.b - 1) // self.b
+        rows = (n + b - 1) // b
         for p in range(rows):
-            shift = max(0, n - self.b * (p + 1))
+            shift = max(0, n - b * (p + 1))
             if (a >> shift) != (b_ >> shift):
                 return p
         return rows
 
-    def _next_hop_in_zone(self, cur_suffix: int, key_suffix: int, zone: int) -> int | None:
+    def _next_hop_in_zone(
+        self, cur_suffix: int, key_suffix: int, zone: int, b: int | None = None
+    ) -> int | None:
         """Pastry-style digit-fixing hop: jump to the canonical node of the
         range sharing one more base-2^b digit with the key.  Canonical =
         clockwise successor of the range start, so paths from different
         sources CONVERGE (the paper's path-convergence property) and tree
         fanout is bounded by 2^b (+ leaf-set final hops)."""
+        b = b or self.b
         n = self.space.suffix_bits
-        rows = (n + self.b - 1) // self.b
-        p = self._digit_prefix_len(cur_suffix, key_suffix)
+        rows = (n + b - 1) // b
+        p = self._digit_prefix_len(cur_suffix, key_suffix, b)
         while p < rows:
-            shift = max(0, n - self.b * (p + 1))
+            shift = max(0, n - b * (p + 1))
             # Plaxton rule: fix the key's next digit, KEEP the source's
             # remaining digits — paths from different sources spread across
             # the range and converge progressively (bounded tree fanout),
@@ -209,11 +213,14 @@ class MultiRingOverlay:
         key: int,
         *,
         restrict_zone: int | None = None,
+        base_bits: int | None = None,
         max_hops: int | None = None,
     ) -> RouteResult:
         """Greedy two-level prefix/finger routing to the node numerically
         closest to `key`.  ``restrict_zone`` enforces administrative
-        isolation (level-1 entries disabled; cross-zone packets blocked)."""
+        isolation (level-1 entries disabled; cross-zone packets blocked);
+        ``base_bits`` overrides the digit base 2^b for this route only
+        (per-tree fanout — one app's choice must not leak into others)."""
         space = self.space
         cur = src
         path = [cur]
@@ -254,7 +261,7 @@ class MultiRingOverlay:
                 break
 
             # level 2: canonical digit-fixing within the zone
-            nxt = self._next_hop_in_zone(space.suffix_of(cur), key_suffix, cur_zone)
+            nxt = self._next_hop_in_zone(space.suffix_of(cur), key_suffix, cur_zone, base_bits)
             if nxt is None or nxt == cur or nxt in path[-2:]:
                 # no better hop / would cycle: deliver via leaf set
                 final = self._zone_closest(cur_zone, key_suffix)

@@ -1,0 +1,161 @@
+"""Discrete-event multi-app round simulator (paper §VII-D, Table III).
+
+M concurrent FL applications interleave on one overlay: each app's round
+is a chain of phases — broadcast the model level-by-level down its
+dataflow tree, workers compute E local steps, partial aggregates flow
+level-by-level back up — and every phase is an event on a shared clock
+(a heap of completion events).  Transfer phases are priced by the
+bandwidth-sharing model in ``core/congestion.py``: a node uploading to k
+concurrent flows (its own fanout plus any other app whose tree routes
+through it) serves each at capacity/k, so overlapping trees contend for
+links exactly where they share nodes.  This is what makes the paper's
+"M concurrent apps vs centralized queue" speedup curve measurable: the
+centralized baseline (``fl/rounds.CentralizedBaseline``) serializes all
+M apps through one coordinator, Totoro+'s trees only slow each other
+down where they physically overlap.
+
+Everything is deterministic: ties on the clock break by event sequence
+number, and the congestion pricing has no stochastic terms (link-failure
+draws stay in the planner's environment, not here).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .congestion import CongestionEnv
+
+
+@dataclass(frozen=True)
+class RoundEvent:
+    """One completed (app, round): recorded when the root finishes
+    aggregating, i.e. the paper's per-app round completion time."""
+
+    app_id: int
+    round: int
+    start_ms: float
+    end_ms: float
+
+    @property
+    def duration_ms(self) -> float:
+        return self.end_ms - self.start_ms
+
+
+class MultiAppSimulator:
+    """Event-driven clock over M apps' rounds on one shared overlay.
+
+    ``handles``: the apps' ``AppHandle``s (their trees define the phase
+    structure).  ``model_bytes`` sizes every transfer; ``compute_ms`` is
+    a scalar or ``f(handle, round) -> ms`` for the local-training phase.
+    """
+
+    def __init__(
+        self,
+        system,
+        handles,
+        *,
+        model_bytes: float,
+        compute_ms: float | Callable = 50.0,
+        base_ms: float = 5.0,
+    ):
+        self.system = system
+        self.handles = list(handles)
+        self.compute_ms = compute_ms
+        nodes = system.overlay.nodes()
+        self._node_idx = {n: i for i, n in enumerate(nodes)}
+        cap = np.asarray([system.overlay.bandwidth[n] for n in nodes], np.float32)
+        self.env = CongestionEnv(
+            capacity=jnp.asarray(cap),
+            theta=jnp.ones(len(nodes), jnp.float32),
+            packet_mbit=float(model_bytes) * 8e-6,
+            base_ms=base_ms,
+        )
+        self._phases = [self._phases_of(h.tree) for h in self.handles]
+        self._active: dict[int, np.ndarray] = {}  # event seq -> sender idx array
+
+    def _phases_of(self, tree) -> list[tuple[str, np.ndarray | None]]:
+        """Round = broadcast levels (sender = parent, one flow per child),
+        one compute phase, aggregation levels (sender = each child)."""
+        phases: list[tuple[str, np.ndarray | None]] = []
+        agg = tree.aggregation_schedule()
+        for level in reversed(agg):  # root -> leaves
+            senders = [self._node_idx[p] for p, kids in level for _ in kids]
+            phases.append(("bcast", np.asarray(senders, np.int32)))
+        phases.append(("compute", None))
+        for level in agg:  # leaves -> root
+            senders = [self._node_idx[c] for _, kids in level for c in kids]
+            phases.append(("agg", np.asarray(senders, np.int32)))
+        return phases
+
+    def _transfer_ms(self, senders: np.ndarray) -> float:
+        """Price this phase's flows with every in-flight flow still active:
+        per-flow latency = base + bits / (capacity_sender / k) where k is
+        the number of concurrent flows sharing that sender's uplink
+        (``CongestionEnv.latency_ms``); the phase ends when its slowest
+        flow does."""
+        flows = [senders] + list(self._active.values())
+        actions = jnp.asarray(np.concatenate(flows))
+        lat = np.asarray(self.env.latency_ms(actions))
+        return float(lat[: len(senders)].max())
+
+    def _compute_ms(self, app_idx: int, round_num: int) -> float:
+        if callable(self.compute_ms):
+            return float(self.compute_ms(self.handles[app_idx], round_num))
+        return float(self.compute_ms)
+
+    def run(self, rounds: int = 1) -> list[RoundEvent]:
+        """Interleave every app's ``rounds`` rounds; returns the per-app
+        completion records in completion order (deterministic)."""
+        heap: list[tuple[float, int, int]] = []
+        seq = 0
+        self._active.clear()
+        state = [
+            {"phase": 0, "round": 0, "start": 0.0} for _ in self.handles
+        ]
+        history: list[RoundEvent] = []
+
+        def start_phase(i: int, t: float) -> None:
+            nonlocal seq
+            kind, senders = self._phases[i][state[i]["phase"]]
+            if kind == "compute":
+                dur = self._compute_ms(i, state[i]["round"])
+            elif senders is None or len(senders) == 0:
+                dur = 0.0
+            else:
+                dur = self._transfer_ms(senders)
+                self._active[seq] = senders
+            heapq.heappush(heap, (t + dur, seq, i))
+            seq += 1
+
+        for i in range(len(self._phases)):
+            # every app has >= 1 phase: _phases_of always emits compute
+            start_phase(i, 0.0)
+
+        while heap:
+            t, ev_seq, i = heapq.heappop(heap)
+            self._active.pop(ev_seq, None)
+            st = state[i]
+            st["phase"] += 1
+            if st["phase"] >= len(self._phases[i]):
+                history.append(
+                    RoundEvent(self.handles[i].app_id, st["round"], st["start"], t)
+                )
+                st["round"] += 1
+                st["phase"] = 0
+                st["start"] = t
+                if st["round"] >= rounds:
+                    continue
+            start_phase(i, t)
+        return history
+
+
+def per_app_round_ms(history: list[RoundEvent]) -> dict[int, list[float]]:
+    """app_id -> round durations (ms), in round order."""
+    out: dict[int, list[float]] = {}
+    for ev in sorted(history, key=lambda e: (e.app_id, e.round)):
+        out.setdefault(ev.app_id, []).append(ev.duration_ms)
+    return out

@@ -16,12 +16,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import TotoroSystem
 from repro.fl import small_models as sm
-from repro.kernels import ops as kops
 
 
 @dataclass
@@ -66,53 +64,19 @@ def make_app(
     )
 
 
-def run_round(system: TotoroSystem, app: FLApp, *, use_kernel: bool = True) -> dict:
-    """One Totoro+ round; returns metrics incl. modeled wall time."""
-    logits_fn = sm.LOGITS[app.model]
-    tree = app.handle.tree
+def run_round(
+    system: TotoroSystem, app: FLApp, *, use_kernel: bool = True, vectorized: bool = True
+) -> dict:
+    """One Totoro+ round; returns metrics incl. modeled wall time.
 
-    # 1. model broadcast down the tree
-    bstats = system.Broadcast(app.handle.app_id, app.params)
+    Delegates to the vectorized round engine (``fl/engine.py``): all
+    workers' local steps run as one jitted vmap, aggregation executes the
+    tree's level schedule through the batched Pallas kernel.  Pass
+    ``vectorized=False`` for the per-worker reference loop.
+    """
+    from repro.fl import engine
 
-    # 2. local training on each worker's shard
-    deltas, weights, losses = [], [], []
-    for w in sorted(tree.members):
-        if w not in app.data:
-            continue
-        x, y = app.data[w]
-        new_p, loss = sm.local_train(
-            app.params, app.params, x, y,
-            logits_fn=logits_fn, steps=app.local_steps, lr=app.lr, mu=app.mu,
-        )
-        deltas.append(jax.tree.map(lambda a, b: a - b, new_p, app.params))
-        weights.append(float(len(y)))
-        losses.append(float(loss))
-
-    # 3. aggregation up the tree (weighted mean; kernel = aggregator math)
-    w = np.asarray(weights) / np.sum(weights)
-    if use_kernel:
-        agg = kops.tree_aggregate_pytree(deltas, w)
-    else:
-        agg = jax.tree.map(lambda *ls: sum(wi * l for wi, l in zip(w, ls)), *deltas)
-    astats = system.Aggregate(
-        app.handle.app_id,
-        {n: d for n, d in zip(sorted(tree.members), deltas)},
-        weights={n: wt for n, wt in zip(sorted(tree.members), weights)},
-    )
-
-    # 4. server update + state replication (paper §IV-D)
-    app.params = jax.tree.map(lambda p, d: p + d, app.params, agg)
-    app.round_num += 1
-    system.replicate_master_state(app.handle.app_id, {"round": app.round_num})
-
-    metrics = {
-        "round": app.round_num,
-        "loss": float(np.mean(losses)),
-        "time_ms": bstats["time_ms"] + astats["time_ms"],
-        "traffic_bytes": bstats["bytes"] + astats["bytes"],
-    }
-    app.history.append(metrics)
-    return metrics
+    return engine.run_round(system, app, use_kernel=use_kernel, vectorized=vectorized)
 
 
 def evaluate(app: FLApp, x, y) -> float:

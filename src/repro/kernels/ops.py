@@ -38,6 +38,13 @@ def tree_aggregate(grads: jax.Array, weights: jax.Array) -> jax.Array:
     return out[: grads.shape[1]]
 
 
+def tree_aggregate_groups(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """(G, C, L) x (G, C) -> (G, L): one tree level as G padded groups."""
+    g, pad = _pad_to(grads, _ta.TILE, axis=2)
+    out = _ta.tree_aggregate_groups(g, weights, interpret=_interpret())
+    return out[:, : grads.shape[2]]
+
+
 def tree_aggregate_pytree(updates: list, weights) -> object:
     """Aggregate a list of model-update pytrees with the kernel."""
     w = jnp.asarray(weights, jnp.float32)

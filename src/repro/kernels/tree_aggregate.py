@@ -46,3 +46,46 @@ def tree_aggregate(grads: jax.Array, weights: jax.Array, *, interpret: bool = Fa
         out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
         interpret=interpret,
     )(grads, w2)
+
+
+GROUP_BLOCK = 8  # groups per program: GB*C*TILE*4B <= 1 MB VMEM at C=32
+
+
+def _group_kernel(g_ref, w_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)  # (GB, C, TILE)
+    w = w_ref[...].astype(jnp.float32)  # (GB, C, 1)
+    o_ref[...] = jnp.sum(g * w, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_aggregate_groups(
+    grads: jax.Array, weights: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """Batched per-level aggregation: one tree level is G independent
+    (parent, children) groups, padded to a common child count C — the
+    whole level runs as ONE kernel launch (grid over group blocks x
+    tiles) instead of G separate aggregator calls.
+
+    grads: (G, C, L); weights: (G, C) — ragged groups carry zero weights
+    in the padding slots -> (G, L) f32 weighted sums, one per parent.
+    """
+    G, C, L = grads.shape
+    assert L % TILE == 0, L
+    w3 = weights.reshape(G, C, 1).astype(jnp.float32)
+    gb = min(GROUP_BLOCK, G)
+    pad = (-G) % gb
+    if pad:  # zero-weight phantom groups complete the last block
+        grads = jnp.pad(grads, ((0, pad), (0, 0), (0, 0)))
+        w3 = jnp.pad(w3, ((0, pad), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _group_kernel,
+        grid=((G + pad) // gb, L // TILE),
+        in_specs=[
+            pl.BlockSpec((gb, C, TILE), lambda g, i: (g, 0, i)),
+            pl.BlockSpec((gb, C, 1), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((gb, TILE), lambda g, i: (g, i)),
+        out_shape=jax.ShapeDtypeStruct((G + pad, L), jnp.float32),
+        interpret=interpret,
+    )(grads, w3)
+    return out[:G]

@@ -201,6 +201,8 @@ def lower_cell(cell: Cell, mesh):
         out_shardings=cell.out_shardings,
         donate_argnums=cell.donate_argnums,
     )
-    with jax.set_mesh(mesh):
+    # jax < 0.6 has no jax.set_mesh; Mesh is itself the ambient-mesh context
+    ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+    with ctx:
         lowered = jitted.lower(*cell.args)
         return lowered

@@ -101,18 +101,44 @@ def test_api_verbs_end_to_end():
     h = sys.CreateTree(
         "sentiment",
         selection_fn=lambda n: n % 2 == 0,  # client selection customization
-        on_broadcast=lambda app, obj: received.append(obj),
+        on_broadcast=lambda app, worker, obj: received.append((worker, obj)),
     )
     ok = [sys.Subscribe(h.app_id, n) for n in nodes[:40]]
     assert any(ok) and not all(ok)  # selection_fn rejected odd nodes
     stats = sys.Broadcast(h.app_id, np.ones(10))
     assert stats["time_ms"] > 0 and stats["bytes"] > 0
-    assert received  # callback fired per worker
+    assert received  # callback fired per worker, with the receiving id
+    assert {w for w, _ in received} == set(h.tree.members)
     updates = {n: np.full(10, float(i)) for i, n in enumerate(sorted(h.tree.members)[:4])}
     agg = sys.Aggregate(h.app_id, updates)
     np.testing.assert_allclose(agg["result"], np.mean([v for v in updates.values()], axis=0))
     reg = sys.Discover(nodes[-1])
     assert any(m.get("name") == "sentiment" for m in reg.values())
+
+
+def test_fanout_bits_is_per_tree():
+    """One app's fanout_bits must not leak into other apps' routing."""
+    sys = TotoroSystem(zone_bits=2, suffix_bits=20, seed=5)
+    rng = np.random.default_rng(1)
+    nodes = [sys.Join("n", i, site=i % 4, coord=rng.uniform(0, 10, 2)) for i in range(400)]
+    b_before = sys.overlay.b
+    narrow = sys.CreateTree("narrow", fanout_bits=2)
+    default = sys.CreateTree("default")
+    assert sys.overlay.b == b_before  # no global mutation
+    assert narrow.tree.meta["fanout_bits"] == 2
+    for w in nodes[:150]:
+        sys.Subscribe(narrow.app_id, w)
+        sys.Subscribe(default.app_id, w)
+    assert sys.overlay.b == b_before
+    # explicit base_bits == overlay default leaves routing unchanged;
+    # a different digit base changes this tree's routes only
+    src, key = nodes[7], narrow.app_id
+    assert sys.overlay.route(src, key, base_bits=b_before).path == sys.overlay.route(src, key).path
+    assert sys.overlay.route(src, key, base_bits=1).path != sys.overlay.route(src, key).path
+    # smaller digit base -> longer paths (deeper tree), fewer direct
+    # deliveries at the rendezvous root
+    assert narrow.tree.depth() >= default.tree.depth()
+    assert len(narrow.tree.children[narrow.tree.root]) < len(default.tree.children[default.tree.root])
 
 
 def test_zone_restricted_tree_stays_in_zone():

@@ -3,7 +3,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.nodeid import IdSpace, abs_ring_distance, sha1_id
 from repro.core.overlay import MultiRingOverlay, distributed_binning

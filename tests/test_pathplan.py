@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip("hypothesis")  # optional dev dep
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.congestion import CongestionEnv, make_env
 from repro.core.pathplan import (
