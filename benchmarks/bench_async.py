@@ -1,0 +1,158 @@
+"""Sync vs async buffered execution: time-to-target-loss under churn.
+
+The async claim (ROADMAP / paper §VII): a barrier round is priced by its
+slowest worker, so under a heterogeneous edge compute distribution the
+synchronous engine crawls at straggler speed, while FedBuff-style
+buffered aggregation applies after the K fastest arrivals and keeps the
+pipeline full — even with ≥10% of workers failing and rejoining
+mid-round (churn on the event clock, repaired by ``core/recovery``).
+
+For M in {1, 4, 16} concurrent apps on one overlay this measures, per
+app, the simulated time until the mean local loss first reaches a target
+for (a) the synchronous scheduler (clean — no churn handicap), and
+(b) the async scheduler with heterogeneous compute AND churn.  Async
+wins despite the handicap.
+
+``python -m benchmarks.bench_async --smoke`` runs a small configuration
+and writes a ``BENCH_async.json`` artifact (the CI perf trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.common import build_system, row
+
+
+def _make_apps(sys_, nodes, rng, m, w, *, dim=16, classes=4, shard=24, tag=""):
+    from repro import data as data_mod
+    from repro.fl import rounds
+
+    apps = []
+    for a in range(m):
+        x, y = data_mod.synthetic_classification(w * shard, dim, classes, seed=100 + a)
+        parts = data_mod.dirichlet_partition(y, w, alpha=1.0, seed=200 + a)
+        parts = [p if len(p) else np.arange(3) for p in parts]
+        ws = [int(n) for n in rng.choice(nodes, size=w, replace=False)]
+        apps.append(
+            rounds.make_app(
+                sys_, f"async{tag}-{m}-{a}", workers=ws,
+                data_by_worker={n: (x[parts[i]], y[parts[i]]) for i, n in enumerate(ws)},
+                dim=dim, num_classes=classes, local_steps=3, lr=0.2, seed=a,
+            )
+        )
+    return apps
+
+
+def _time_to_target(ts, losses, target):
+    for t, l in zip(ts, losses):
+        if l <= target:
+            return float(t)
+    return float("inf")
+
+
+def compare(m_apps: int, *, workers=8, rounds_n=5, seed=0, target=0.5,
+            base_ms=40.0, spread=6.0, model_bytes=2e5) -> dict:
+    """One sync-vs-async comparison at M concurrent apps; returns metrics."""
+    from repro.core.sim import ChurnModel, SyncRoundScheduler, per_app_round_ms
+    from repro.fl import async_engine, rounds
+
+    per_worker = async_engine.worker_compute_fn(base_ms, spread, seed=seed)
+
+    # (a) synchronous: barrier waits for the slowest worker; no churn
+    sys_s, nodes_s, rng_s = build_system(n_nodes=600, zones=4, seed=seed)
+    apps_s = _make_apps(sys_s, nodes_s, rng_s, m_apps, workers, tag="s")
+    sched = SyncRoundScheduler(
+        sys_s, [a.handle for a in apps_s], model_bytes=model_bytes,
+        compute_ms=async_engine.sync_barrier_compute_fn(per_worker),
+    )
+    hist = sched.run(rounds=rounds_n)
+    sync_t = {aid: np.cumsum(v) for aid, v in per_app_round_ms(hist).items()}
+    sync_tt = []
+    for app in apps_s:
+        losses = [rounds.run_round(sys_s, app)["loss"] for _ in range(rounds_n)]
+        sync_tt.append(_time_to_target(sync_t[app.handle.app_id], losses, target))
+
+    # (b) async buffered: K = W/2, staleness-weighted, WITH churn
+    sys_a, nodes_a, rng_a = build_system(n_nodes=600, zones=4, seed=seed)
+    apps_a = _make_apps(sys_a, nodes_a, rng_a, m_apps, workers, tag="a")
+    churn = ChurnModel(
+        period_ms=6.0 * base_ms, downtime_ms=12.0 * base_ms,
+        group_size=max(1, round(0.1 * workers)), seed=seed,
+    )
+    res = async_engine.run_async(
+        sys_a, apps_a, applies=2 * rounds_n, buffer_k=max(2, workers // 2),
+        staleness_alpha=0.5, model_bytes=model_bytes, compute_ms=per_worker,
+        churn=churn,
+    )
+    async_tt = []
+    for app in apps_a:
+        h = [r for r in res["history"] if r["app_id"] == app.handle.app_id]
+        async_tt.append(_time_to_target([r["t_ms"] for r in h], [r["loss"] for r in h], target))
+    failed_once = {n for c in res["churn"] if c.kind == "fail" for n in c.nodes}
+    stal = [e.mean_staleness for e in res["events"]]
+    return {
+        "m": m_apps,
+        "workers": workers,
+        "target_loss": target,
+        "sync_tt_ms": float(np.mean(sync_tt)),
+        "async_tt_ms": float(np.mean(async_tt)),
+        "speedup": float(np.mean(sync_tt) / max(np.mean(async_tt), 1e-9)),
+        "churn_fraction": len(failed_once) / float(m_apps * workers),
+        "churn_events": len(res["churn"]),
+        "mean_staleness": float(np.mean(stal)) if stal else 0.0,
+    }
+
+
+def run() -> list[str]:
+    out = []
+    for m in (1, 4, 16):
+        r = compare(m)
+        out.append(
+            row(
+                f"async_vs_sync_m{m}",
+                0.0,
+                f"sync_tt_ms={r['sync_tt_ms']:.0f};async_tt_ms={r['async_tt_ms']:.0f};"
+                f"speedup={r['speedup']:.2f}x;churn_frac={r['churn_fraction']:.2f};"
+                f"mean_staleness={r['mean_staleness']:.2f}",
+            )
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small config; write BENCH_async.json")
+    ap.add_argument("--out", default="BENCH_async.json")
+    args = ap.parse_args()
+    ms = (1, 4) if args.smoke else (1, 4, 16)
+    rounds_n = 3 if args.smoke else 5
+    results = [compare(m, rounds_n=rounds_n) for m in ms]
+    payload = {
+        "bench": "async_vs_sync_time_to_target",
+        "smoke": bool(args.smoke),
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    for r in results:
+        print(
+            f"M={r['m']}: sync={r['sync_tt_ms']:.0f}ms async={r['async_tt_ms']:.0f}ms "
+            f"speedup={r['speedup']:.2f}x churn={r['churn_fraction']:.0%} "
+            f"staleness={r['mean_staleness']:.2f}"
+        )
+    ok = all(r["speedup"] > 1.0 and r["churn_fraction"] >= 0.10 for r in results)
+    print(f"wrote {args.out}; async beats sync under churn: {ok}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 def main() -> None:
     from benchmarks import (
         bench_adaptivity,
+        bench_async,
         bench_engine,
         bench_hops,
         bench_kernels,
@@ -25,6 +26,7 @@ def main() -> None:
 
     modules = [
         ("engine+sim(TabIII)", bench_engine),
+        ("async_vs_sync(FedBuff)", bench_async),
         ("scalability(Fig5)", bench_scalability),
         ("hops(Fig6)", bench_hops),
         ("traffic(Fig7)", bench_traffic),

@@ -21,6 +21,16 @@ from .nodeid import IdSpace
 from .overlay import MultiRingOverlay
 
 
+@dataclass(frozen=True)
+class BufferedDelta:
+    """One committed worker update waiting in the master's buffer."""
+
+    worker: int
+    delta: Any
+    weight: float
+    staleness: int
+
+
 @dataclass
 class AppHandle:
     app_id: int
@@ -36,6 +46,8 @@ class AppHandle:
     on_timer: Callable | None = None
     round_num: int = 0
     traffic_bytes: float = 0.0
+    version: int = 0  # bumped by ApplyBuffered (async model version)
+    buffer: list[BufferedDelta] = field(default_factory=list)
 
 
 class TotoroSystem:
@@ -140,6 +152,89 @@ class TotoroSystem:
         if h.on_aggregate:
             h.on_aggregate(app_id, result)
         return {"time_ms": time_ms, "bytes": nbytes, "result": result, "levels": levels}
+
+    # -- async buffered verbs (FedBuff-style execution path) -------------------
+
+    def CommitDelta(self, app_id: int, worker: int, delta: Any, *, weight: float = 1.0, staleness: int = 0) -> dict:
+        """A worker commits its local update to the master's buffer.
+
+        The delta travels the worker's tree path hop-by-hop (per-edge
+        traffic, store-and-forward latency); privacy/compression hooks
+        apply exactly as on the synchronous Aggregate path.  Staleness is
+        recorded per commit — the weight discount happens at apply time
+        so one ``ApplyBuffered`` policy governs the whole buffer.
+        """
+        h = self.apps[app_id]
+        payload = delta
+        if h.privacy_fn:
+            payload = h.privacy_fn(payload)
+        wire = h.compress_fn(payload) if h.compress_fn else payload
+        nbytes = _nbytes(wire)
+        tree = h.tree
+        if worker == tree.root or worker not in tree.parent:
+            path = [worker]
+        else:
+            path = tree.path_to_root(worker)
+        n_edges = len(path) - 1
+        time_ms = self.overlay.path_latency(path)
+        h.traffic_bytes += nbytes * n_edges
+        received = h.decompress_fn(wire) if h.decompress_fn else payload
+        h.buffer.append(
+            BufferedDelta(worker=worker, delta=received, weight=float(weight), staleness=int(staleness))
+        )
+        return {
+            "time_ms": time_ms,
+            "bytes": nbytes * n_edges,
+            "edges": n_edges,
+            "buffered": len(h.buffer),
+        }
+
+    def ApplyBuffered(self, app_id: int, *, staleness_alpha: float = 0.5, min_k: int = 1) -> dict:
+        """Drain the buffer into one staleness-weighted aggregate.
+
+        Weights ``w_i / (1 + staleness_i)^alpha`` are folded into the
+        ``tree_aggregate_groups`` kernel's weight vector
+        (``kernels.ops.buffered_aggregate``), so with alpha = 0 and a
+        full uniform-staleness buffer the result is exactly the
+        synchronous FedAvg weighted mean.  Returns ``result=None`` when
+        fewer than ``min_k`` commits are buffered (buffer untouched).
+        """
+        from repro.kernels.ops import buffered_aggregate
+        from repro.kernels.tree_aggregate import staleness_weights
+
+        h = self.apps[app_id]
+        if len(h.buffer) < max(1, min_k):
+            return {"result": None, "arrivals": len(h.buffer), "version": h.version}
+        entries, h.buffer = h.buffer, []
+        if h.aggregate_fn is not None:
+            result = h.aggregate_fn(
+                [e.delta for e in entries],
+                list(staleness_weights(
+                    np.asarray([e.weight for e in entries], np.float64),
+                    np.asarray([e.staleness for e in entries], np.float64),
+                    staleness_alpha,
+                )),
+            )
+            combined = None
+        else:
+            result, combined = buffered_aggregate(
+                [e.delta for e in entries],
+                [e.weight for e in entries],
+                [e.staleness for e in entries],
+                alpha=staleness_alpha,
+            )
+        h.version += 1
+        stats = {
+            "result": result,
+            "arrivals": len(entries),
+            "workers": [e.worker for e in entries],
+            "staleness": [e.staleness for e in entries],
+            "weights": None if combined is None else [float(w) for w in combined],
+            "version": h.version,
+        }
+        if h.on_aggregate:
+            h.on_aggregate(app_id, result)
+        return stats
 
     def Discover(self, node: int) -> dict[int, dict]:
         """AD-tree application discovery (journal addition, Appendix A)."""

@@ -78,13 +78,34 @@ class DataflowTree:
         """The same level batches root -> leaves (dissemination order)."""
         return list(reversed(self.aggregation_schedule()))
 
-    def broadcast_time(self, overlay: MultiRingOverlay, payload_ms: float = 0.0) -> float:
-        """Model dissemination root->leaves: max over leaves of path latency."""
+    def broadcast_time(
+        self,
+        overlay: MultiRingOverlay,
+        payload_ms: float = 0.0,
+        *,
+        pipelined: bool = False,
+        chunks: int = 8,
+    ) -> float:
+        """Model dissemination root->leaves: max over leaves of path latency.
+
+        ``pipelined=True`` prices each root->leaf path with per-edge
+        store-and-forward overlap: the payload is cut into ``chunks``
+        pieces so a hop starts forwarding as soon as the first piece
+        lands — a D-hop payload costs t*(D+C-1)/C instead of t*D,
+        approaching the max single edge as C grows (never slower than
+        the synchronous sum).
+        """
         t = 0.0
         for n in self.nodes():
             if n not in self.children or not self.children[n]:  # leaf
                 path = list(reversed(self.path_to_root(n)))
-                t = max(t, overlay.path_latency(path) + payload_ms * (len(path) - 1))
+                edges = len(path) - 1
+                if pipelined and edges > 1:
+                    c = max(1, int(chunks))
+                    payload_total = payload_ms * (edges + c - 1) / c
+                else:
+                    payload_total = payload_ms * edges
+                t = max(t, overlay.path_latency(path) + payload_total)
         return t
 
     def aggregation_time(self, overlay: MultiRingOverlay, payload_ms: float = 0.0) -> float:

@@ -41,12 +41,29 @@ class ReplicaStore:
         self.replicas[app_id] = {h: state for h in holders}
         return holders
 
-    def restore(self, overlay: MultiRingOverlay, app_id: int):
-        """First replica on a live holder (any intact copy suffices)."""
-        for holder, state in self.replicas.get(app_id, {}).items():
-            if holder in overlay.alive:
-                return holder, state
-        return None, None
+    def restore(self, overlay: MultiRingOverlay, app_id: int, *, master: int | None = None):
+        """Restore from the live holder ring-closest to the failed master.
+
+        Any intact copy suffices for correctness; picking by ring distance
+        (ties broken by id) makes the takeover deterministic — the old
+        dict-insertion-order scan depended on replication-call history.
+        """
+        live = [h for h in self.replicas.get(app_id, {}) if h in overlay.alive]
+        if not live:
+            return None, None
+        if master is None:
+            holder = min(live)
+        else:
+            space = overlay.space
+            ms = space.suffix_of(master)
+            holder = min(
+                live,
+                key=lambda h: (
+                    abs_ring_distance(space.suffix_of(h), ms, space.suffix_space),
+                    h,
+                ),
+            )
+        return holder, self.replicas[app_id][holder]
 
 
 def fail_and_recover(
@@ -83,7 +100,7 @@ def fail_and_recover(
         max_hops = max(max_hops, res.hops)
         max_latency = max(max_latency, overlay.path_latency(res.path))
         if replicas is not None:
-            restored_from, _state = replicas.restore(overlay, tree.app_id)
+            restored_from, _state = replicas.restore(overlay, tree.app_id, master=tree.root)
         old_root = tree.root
         tree.root = new_master
         tree.parent.pop(new_master, None)

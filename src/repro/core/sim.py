@@ -1,22 +1,30 @@
-"""Discrete-event multi-app round simulator (paper §VII-D, Table III).
+"""Discrete-event execution layer: pluggable schedulers on one clock.
 
-M concurrent FL applications interleave on one overlay: each app's round
-is a chain of phases — broadcast the model level-by-level down its
-dataflow tree, workers compute E local steps, partial aggregates flow
-level-by-level back up — and every phase is an event on a shared clock
-(a heap of completion events).  Transfer phases are priced by the
-bandwidth-sharing model in ``core/congestion.py``: a node uploading to k
-concurrent flows (its own fanout plus any other app whose tree routes
-through it) serves each at capacity/k, so overlapping trees contend for
-links exactly where they share nodes.  This is what makes the paper's
-"M concurrent apps vs centralized queue" speedup curve measurable: the
-centralized baseline (``fl/rounds.CentralizedBaseline``) serializes all
-M apps through one coordinator, Totoro+'s trees only slow each other
-down where they physically overlap.
+The round engine used to be a monolith: ``MultiAppSimulator`` priced each
+app's round as a fixed chain of phases with a hard barrier per round.
+This module splits that into an event core plus two schedulers:
+
+- ``EventCore`` owns the shared clock (heap of completion events), the
+  congestion-priced transfer model from ``core/congestion.py`` (a node
+  uploading to k concurrent flows serves each at capacity/k), and event
+  cancellation — everything that is *not* policy.
+- ``SyncRoundScheduler`` reproduces the original barrier-per-round
+  behavior (paper §VII-D, Table III): broadcast levels down, one compute
+  phase, aggregation levels up.  ``MultiAppSimulator`` remains as an
+  alias.  New: ``pipelined=True`` prices dissemination with per-edge
+  store-and-forward overlap (``pipelined_time``), so a deep tree's
+  broadcast cost approaches its max level instead of the level sum.
+- ``AsyncBufferScheduler`` is the FedBuff-style async path (ROADMAP):
+  every worker runs its own download -> compute -> upload cycle as
+  individual clock events, commits land in the master's buffer, and the
+  aggregator applies a staleness-weighted buffered update after K
+  arrivals.  A ``ChurnModel`` injects fail/rejoin events on the *same*
+  clock, driving ``core/recovery.fail_and_recover`` mid-round so repair
+  latency lands on the timeline.
 
 Everything is deterministic: ties on the clock break by event sequence
-number, and the congestion pricing has no stochastic terms (link-failure
-draws stay in the planner's environment, not here).
+number, churn draws come from a seeded generator owned by the model, and
+the congestion pricing has no stochastic terms.
 """
 from __future__ import annotations
 
@@ -45,12 +53,139 @@ class RoundEvent:
         return self.end_ms - self.start_ms
 
 
-class MultiAppSimulator:
-    """Event-driven clock over M apps' rounds on one shared overlay.
+@dataclass(frozen=True)
+class ApplyEvent:
+    """One buffered apply at an app's master: the async analogue of a
+    round completion (K deltas arrived, staleness-weighted update done)."""
 
-    ``handles``: the apps' ``AppHandle``s (their trees define the phase
-    structure).  ``model_bytes`` sizes every transfer; ``compute_ms`` is
-    a scalar or ``f(handle, round) -> ms`` for the local-training phase.
+    app_id: int
+    apply_index: int
+    time_ms: float
+    arrivals: int
+    mean_staleness: float
+    max_staleness: float
+
+
+@dataclass(frozen=True)
+class ChurnRecord:
+    """A churn event as it landed on the clock (fail or rejoin)."""
+
+    time_ms: float
+    kind: str  # "fail" | "rejoin"
+    nodes: tuple
+    recovery_ms: float = 0.0
+
+
+def pipelined_time(level_ms, chunks: int = 8) -> float:
+    """Store-and-forward pipelining of a phase sequence: the payload is
+    cut into ``chunks`` pieces so level i+1 starts forwarding as soon as
+    the first piece lands.  total = sum(t)/C + max(t)*(C-1)/C — equal to
+    the synchronous sum at C=1, approaching max(t) as C grows, and never
+    exceeding the sum (max <= sum)."""
+    ts = [float(t) for t in level_ms]
+    if not ts:
+        return 0.0
+    c = max(1, int(chunks))
+    return sum(ts) / c + max(ts) * (c - 1) / c
+
+
+class EventCore:
+    """Shared clock + congestion-priced transfers for the schedulers.
+
+    ``handles``: the apps' ``AppHandle``s.  ``model_bytes`` sizes every
+    transfer.  Transfers are priced when scheduled, against every flow
+    still in flight (``CongestionEnv.latency_ms``), and stay registered
+    as active flows until their completion event pops.
+    """
+
+    def __init__(self, system, handles, *, model_bytes: float, base_ms: float = 5.0):
+        self.system = system
+        self.handles = list(handles)
+        nodes = system.overlay.nodes()
+        self._node_idx = {n: i for i, n in enumerate(nodes)}
+        cap = np.asarray([system.overlay.bandwidth[n] for n in nodes], np.float32)
+        self.env = CongestionEnv(
+            capacity=jnp.asarray(cap),
+            theta=jnp.ones(len(nodes), jnp.float32),
+            packet_mbit=float(model_bytes) * 8e-6,
+            base_ms=base_ms,
+        )
+        self.now = 0.0
+        self._heap: list[tuple[float, int]] = []
+        self._seq = 0
+        self._active: dict[int, np.ndarray] = {}  # event seq -> sender idx array
+        self._callbacks: dict[int, Callable | None] = {}
+
+    def _reset_clock(self) -> None:
+        self.now = 0.0
+        self._heap.clear()
+        self._seq = 0
+        self._active.clear()
+        self._callbacks.clear()
+
+    def sender_indices(self, nodes) -> np.ndarray:
+        return np.asarray([self._node_idx[n] for n in nodes], np.int32)
+
+    def transfer_ms(self, senders: np.ndarray, *, reduce: str = "max") -> float:
+        """Price one phase's flows with every in-flight flow still active:
+        per-flow latency = base + bits / (capacity_sender / k) where k is
+        the number of concurrent flows sharing that sender's uplink.
+        ``reduce="max"`` models parallel flows (phase ends when the
+        slowest does); ``"sum"`` models store-and-forward along a path."""
+        if len(senders) == 0:
+            return 0.0
+        flows = [senders] + list(self._active.values())
+        actions = jnp.asarray(np.concatenate(flows))
+        lat = np.asarray(self.env.latency_ms(actions))
+        own = lat[: len(senders)]
+        return float(own.sum() if reduce == "sum" else own.max())
+
+    def schedule(self, delay_ms: float, callback: Callable, senders: np.ndarray | None = None) -> int:
+        """Push a completion event ``delay_ms`` from now; ``senders`` (if
+        given) are registered as active flows until the event pops.
+        Returns the event seq (usable with ``cancel``)."""
+        seq = self._seq
+        self._seq += 1
+        if senders is not None and len(senders):
+            self._active[seq] = senders
+        self._callbacks[seq] = callback
+        heapq.heappush(self._heap, (self.now + delay_ms, seq))
+        return seq
+
+    def cancel(self, seq: int) -> None:
+        """Void a pending event (its flows stop contending immediately)."""
+        self._callbacks[seq] = None
+        self._active.pop(seq, None)
+
+    def run_events(self, *, max_events: int = 1_000_000, stop: Callable[[], bool] | None = None) -> None:
+        """Drain the heap in clock order, dispatching callbacks."""
+        n = 0
+        while self._heap:
+            if stop is not None and stop():
+                return
+            t, seq = heapq.heappop(self._heap)
+            self._active.pop(seq, None)
+            cb = self._callbacks.pop(seq, None)
+            if cb is None:
+                continue  # cancelled
+            self.now = t
+            cb(t)
+            n += 1
+            if n >= max_events:
+                raise RuntimeError(f"event budget exhausted ({max_events})")
+
+
+class SyncRoundScheduler(EventCore):
+    """Barrier-per-round scheduling (the original behavior, preserved).
+
+    Each app's round is a chain of phases — broadcast the model
+    level-by-level down its dataflow tree, workers compute E local steps,
+    partial aggregates flow level-by-level back up — and every phase is
+    one event.  ``compute_ms`` is a scalar or ``f(handle, round) -> ms``.
+    ``pipelined=True`` collapses the broadcast levels into one phase
+    priced by ``pipelined_time`` (per-edge store-and-forward overlap,
+    never slower than the synchronous level sum); aggregation keeps the
+    level chain either way (partial sums must land before forwarding).
     """
 
     def __init__(
@@ -61,46 +196,33 @@ class MultiAppSimulator:
         model_bytes: float,
         compute_ms: float | Callable = 50.0,
         base_ms: float = 5.0,
+        pipelined: bool = False,
+        pipeline_chunks: int = 8,
     ):
-        self.system = system
-        self.handles = list(handles)
+        super().__init__(system, handles, model_bytes=model_bytes, base_ms=base_ms)
         self.compute_ms = compute_ms
-        nodes = system.overlay.nodes()
-        self._node_idx = {n: i for i, n in enumerate(nodes)}
-        cap = np.asarray([system.overlay.bandwidth[n] for n in nodes], np.float32)
-        self.env = CongestionEnv(
-            capacity=jnp.asarray(cap),
-            theta=jnp.ones(len(nodes), jnp.float32),
-            packet_mbit=float(model_bytes) * 8e-6,
-            base_ms=base_ms,
-        )
+        self.pipelined = pipelined
+        self.pipeline_chunks = pipeline_chunks
         self._phases = [self._phases_of(h.tree) for h in self.handles]
-        self._active: dict[int, np.ndarray] = {}  # event seq -> sender idx array
 
-    def _phases_of(self, tree) -> list[tuple[str, np.ndarray | None]]:
+    def _phases_of(self, tree) -> list[tuple[str, object]]:
         """Round = broadcast levels (sender = parent, one flow per child),
         one compute phase, aggregation levels (sender = each child)."""
-        phases: list[tuple[str, np.ndarray | None]] = []
+        phases: list[tuple[str, object]] = []
         agg = tree.aggregation_schedule()
+        bcast_levels = []
         for level in reversed(agg):  # root -> leaves
             senders = [self._node_idx[p] for p, kids in level for _ in kids]
-            phases.append(("bcast", np.asarray(senders, np.int32)))
+            bcast_levels.append(np.asarray(senders, np.int32))
+        if self.pipelined and bcast_levels:
+            phases.append(("pbcast", bcast_levels))
+        else:
+            phases.extend(("bcast", s) for s in bcast_levels)
         phases.append(("compute", None))
         for level in agg:  # leaves -> root
             senders = [self._node_idx[c] for _, kids in level for c in kids]
             phases.append(("agg", np.asarray(senders, np.int32)))
         return phases
-
-    def _transfer_ms(self, senders: np.ndarray) -> float:
-        """Price this phase's flows with every in-flight flow still active:
-        per-flow latency = base + bits / (capacity_sender / k) where k is
-        the number of concurrent flows sharing that sender's uplink
-        (``CongestionEnv.latency_ms``); the phase ends when its slowest
-        flow does."""
-        flows = [senders] + list(self._active.values())
-        actions = jnp.asarray(np.concatenate(flows))
-        lat = np.asarray(self.env.latency_ms(actions))
-        return float(lat[: len(senders)].max())
 
     def _compute_ms(self, app_idx: int, round_num: int) -> float:
         if callable(self.compute_ms):
@@ -110,34 +232,27 @@ class MultiAppSimulator:
     def run(self, rounds: int = 1) -> list[RoundEvent]:
         """Interleave every app's ``rounds`` rounds; returns the per-app
         completion records in completion order (deterministic)."""
-        heap: list[tuple[float, int, int]] = []
-        seq = 0
-        self._active.clear()
-        state = [
-            {"phase": 0, "round": 0, "start": 0.0} for _ in self.handles
-        ]
+        self._reset_clock()
+        state = [{"phase": 0, "round": 0, "start": 0.0} for _ in self.handles]
         history: list[RoundEvent] = []
 
-        def start_phase(i: int, t: float) -> None:
-            nonlocal seq
+        def start_phase(i: int) -> None:
             kind, senders = self._phases[i][state[i]["phase"]]
             if kind == "compute":
-                dur = self._compute_ms(i, state[i]["round"])
+                dur, senders = self._compute_ms(i, state[i]["round"]), None
+            elif kind == "pbcast":
+                # price each level against the current in-flight set, then
+                # overlap them: all levels' flows stay active together
+                level_ms = [self.transfer_ms(s) for s in senders]
+                dur = pipelined_time(level_ms, self.pipeline_chunks)
+                senders = np.concatenate(senders)
             elif senders is None or len(senders) == 0:
-                dur = 0.0
+                dur, senders = 0.0, None
             else:
-                dur = self._transfer_ms(senders)
-                self._active[seq] = senders
-            heapq.heappush(heap, (t + dur, seq, i))
-            seq += 1
+                dur = self.transfer_ms(senders)
+            self.schedule(dur, lambda t, i=i: end_phase(i, t), senders)
 
-        for i in range(len(self._phases)):
-            # every app has >= 1 phase: _phases_of always emits compute
-            start_phase(i, 0.0)
-
-        while heap:
-            t, ev_seq, i = heapq.heappop(heap)
-            self._active.pop(ev_seq, None)
+        def end_phase(i: int, t: float) -> None:
             st = state[i]
             st["phase"] += 1
             if st["phase"] >= len(self._phases[i]):
@@ -148,9 +263,340 @@ class MultiAppSimulator:
                 st["phase"] = 0
                 st["start"] = t
                 if st["round"] >= rounds:
-                    continue
-            start_phase(i, t)
+                    return
+            start_phase(i)
+
+        for i in range(len(self._phases)):
+            # every app has >= 1 phase: _phases_of always emits compute
+            start_phase(i)
+        self.run_events()
         return history
+
+
+# the original name stays importable: the sync scheduler IS the old
+# MultiAppSimulator, bit-for-bit on its event trace
+MultiAppSimulator = SyncRoundScheduler
+
+
+class ChurnModel:
+    """Deterministic fail/rejoin schedule for the async scheduler.
+
+    Every ``period_ms`` it fails ``group_size`` live workers (drawn from a
+    seeded generator over the sorted live-worker pool — never a tree root
+    unless ``allow_master_failure``); each failed node rejoins the overlay
+    and re-Subscribes ``downtime_ms`` later.  Fail events call
+    ``core/recovery.fail_and_recover`` per affected tree, so orphan
+    re-grafts and master failover land on the simulation clock and their
+    repair latency delays the orphans' next cycle.
+    """
+
+    def __init__(
+        self,
+        *,
+        period_ms: float = 500.0,
+        downtime_ms: float = 1500.0,
+        group_size: int = 1,
+        seed: int = 0,
+        allow_master_failure: bool = False,
+        max_fail_events: int | None = None,
+    ):
+        self.period_ms = float(period_ms)
+        self.downtime_ms = float(downtime_ms)
+        self.group_size = int(group_size)
+        self.allow_master_failure = allow_master_failure
+        self.max_fail_events = max_fail_events
+        self.rng = np.random.default_rng(seed)
+        self.fired = 0
+
+    def pick_victims(self, pool: list[int]) -> list[int]:
+        if not pool:
+            return []
+        k = min(self.group_size, len(pool))
+        idx = self.rng.choice(len(pool), size=k, replace=False)
+        return [pool[int(i)] for i in np.sort(idx)]
+
+    def exhausted(self) -> bool:
+        return self.max_fail_events is not None and self.fired >= self.max_fail_events
+
+
+class AsyncBufferScheduler(EventCore):
+    """FedBuff-style buffered-asynchronous execution on the event clock.
+
+    Every (app, worker) runs an independent cycle: *download* the current
+    model along its tree path (store-and-forward, congestion-priced),
+    *compute* its E local steps (``compute_ms`` scalar or
+    ``f(handle, worker, cycle) -> ms`` for heterogeneous edges), *upload*
+    its delta along the path back to the master.  Each completed upload
+    is a commit; after K commits the master applies a staleness-weighted
+    buffered update and bumps the global model version.  No barrier:
+    workers immediately begin their next cycle, so fast edges lap slow
+    ones and arrive with staleness > 0.  ``barrier=True`` makes workers
+    wait for the next apply before re-downloading — with K = W that is
+    exactly the synchronous FedAvg round on per-worker events (every
+    buffer holds one commit per worker at uniform staleness), which is
+    the equivalence anchor tests/test_async.py checks against the
+    synchronous engine.
+
+    The data plane is delegated to an optional ``trainer``
+    (``fl/async_engine.AsyncTrainer``): ``begin_download`` snapshots the
+    version a worker trains from, ``commit``/``apply`` run the real
+    batched training and the ``CommitDelta``/``ApplyBuffered`` verbs.
+    Without a trainer the scheduler is a pure timing model.
+
+    ``churn`` (a ``ChurnModel``) injects mid-round fail/rejoin events:
+    failed workers' in-flight events are cancelled, affected trees are
+    repaired through ``core/recovery.fail_and_recover`` on the same
+    clock, and re-grafted orphans stall for the repair latency.
+    """
+
+    def __init__(
+        self,
+        system,
+        handles,
+        *,
+        model_bytes: float,
+        compute_ms: float | Callable = 50.0,
+        base_ms: float = 5.0,
+        buffer_k: int | list[int] = 8,
+        churn: ChurnModel | None = None,
+        trainer=None,
+        barrier: bool = False,
+    ):
+        super().__init__(system, handles, model_bytes=model_bytes, base_ms=base_ms)
+        self.compute_ms = compute_ms
+        self.trainer = trainer
+        self.barrier = barrier
+        if isinstance(buffer_k, int):
+            self.buffer_k = [buffer_k] * len(self.handles)
+        else:
+            self.buffer_k = list(buffer_k)
+        assert len(self.buffer_k) == len(self.handles)
+        self.churn = churn
+        self.history: list[ApplyEvent] = []
+        self.churn_log: list[ChurnRecord] = []
+        # per-app run state (filled by run())
+        self._version: list[int] = []
+        self._buffer: list[list[tuple[int, int]]] = []  # (worker, version)
+        self._done: list[bool] = []
+        self._cycle: dict[tuple[int, int], int] = {}
+        self._version_at_start: dict[tuple[int, int], int] = {}
+        self._pending_ev: dict[tuple[int, int], int] = {}
+        self._delay_until: dict[tuple[int, int], float] = {}
+        self._failed: set[int] = set()
+        self._orig_workers: list[set[int]] = []
+        self._applies_target = 1
+
+    # -- worker membership ----------------------------------------------------
+
+    def _workers(self, ai: int) -> list[int]:
+        if self.trainer is not None:
+            return self.trainer.workers(ai)
+        return sorted(self.handles[ai].tree.members)
+
+    def _live_workers(self, ai: int) -> list[int]:
+        return [w for w in self._workers(ai) if w not in self._failed]
+
+    def _effective_k(self, ai: int) -> int:
+        """Clamp K to the live membership so churn can't stall the buffer."""
+        live = len(self._live_workers(ai))
+        return max(1, min(self.buffer_k[ai], live)) if live else self.buffer_k[ai]
+
+    # -- per-worker cycle ------------------------------------------------------
+
+    def _path_senders(self, ai: int, w: int, *, up: bool) -> np.ndarray:
+        tree = self.handles[ai].tree
+        if w == tree.root:
+            return np.asarray([], np.int32)
+        path = tree.path_to_root(w)  # w -> root
+        hops = path if up else list(reversed(path))
+        return self.sender_indices(hops[:-1])
+
+    def _start_cycle(self, ai: int, w: int) -> None:
+        if self._done[ai] or w in self._failed:
+            return
+        key = (ai, w)
+        delay = max(0.0, self._delay_until.pop(key, self.now) - self.now)
+        self._version_at_start[key] = self._version[ai]
+        if self.trainer is not None:
+            self.trainer.begin_download(ai, w)
+        senders = self._path_senders(ai, w, up=False)
+        dur = delay + self.transfer_ms(senders, reduce="sum")
+        self._pending_ev[key] = self.schedule(
+            dur, lambda t, ai=ai, w=w: self._on_downloaded(ai, w, t), senders
+        )
+
+    def _on_downloaded(self, ai: int, w: int, t: float) -> None:
+        if self._done[ai] or w in self._failed:
+            return
+        cyc = self._cycle.get((ai, w), 0)
+        if callable(self.compute_ms):
+            dur = float(self.compute_ms(self.handles[ai], w, cyc))
+        else:
+            dur = float(self.compute_ms)
+        self._pending_ev[(ai, w)] = self.schedule(
+            dur, lambda t, ai=ai, w=w: self._on_computed(ai, w, t)
+        )
+
+    def _on_computed(self, ai: int, w: int, t: float) -> None:
+        if self._done[ai] or w in self._failed:
+            return
+        senders = self._path_senders(ai, w, up=True)
+        dur = self.transfer_ms(senders, reduce="sum")
+        self._pending_ev[(ai, w)] = self.schedule(
+            dur, lambda t, ai=ai, w=w: self._on_uploaded(ai, w, t), senders
+        )
+
+    def _on_uploaded(self, ai: int, w: int, t: float) -> None:
+        if self._done[ai] or w in self._failed:
+            return
+        key = (ai, w)
+        self._pending_ev.pop(key, None)
+        self._cycle[key] = self._cycle.get(key, 0) + 1
+        self._buffer[ai].append((w, self._version_at_start.pop(key)))
+        if self.trainer is not None:
+            self.trainer.commit(ai, w, t)
+        full = len(self._buffer[ai]) >= self._effective_k(ai)
+        if full:
+            self._apply(ai, t)
+        if not self.barrier:
+            self._start_cycle(ai, w)  # next cycle begins immediately
+        elif full:
+            # release only workers idling at the barrier — anyone still
+            # mid-flight (K < W) finishes its current cycle first
+            for lw in self._live_workers(ai):
+                if (ai, lw) not in self._pending_ev:
+                    self._start_cycle(ai, lw)
+
+    def _apply(self, ai: int, t: float) -> None:
+        arrivals = self._buffer[ai]
+        self._buffer[ai] = []
+        cur = self._version[ai]
+        stal = [cur - v for _, v in arrivals]
+        if self.trainer is not None:
+            self.trainer.apply(ai, t)
+        self._version[ai] = cur + 1
+        self.history.append(
+            ApplyEvent(
+                app_id=self.handles[ai].tree.app_id,
+                apply_index=cur,
+                time_ms=t,
+                arrivals=len(arrivals),
+                mean_staleness=float(np.mean(stal)) if stal else 0.0,
+                max_staleness=float(max(stal)) if stal else 0.0,
+            )
+        )
+        if self._version[ai] >= self._applies_target:
+            self._done[ai] = True
+
+    # -- churn -----------------------------------------------------------------
+
+    def _schedule_churn(self) -> None:
+        if self.churn is None or self.churn.exhausted():
+            return
+        self.schedule(self.churn.period_ms, self._on_churn_fail)
+
+    def _victim_pool(self) -> list[int]:
+        roots = {h.tree.root for h in self.handles}
+        pool = set()
+        for ai in range(len(self.handles)):
+            if not self._done[ai]:
+                pool.update(self._live_workers(ai))
+        if not self.churn.allow_master_failure:
+            pool -= roots
+        return sorted(pool)
+
+    def _on_churn_fail(self, t: float) -> None:
+        victims = self.churn.pick_victims(self._victim_pool())
+        self.churn.fired += 1
+        if victims:
+            overlay = self.system.overlay
+            rejoin_info = {
+                n: (overlay.space.zone_of(n), overlay.space.suffix_of(n),
+                    overlay.coords[n], overlay.bandwidth[n])
+                for n in victims
+            }
+            recovery_ms = 0.0
+            for ai, h in enumerate(self.handles):
+                tree = h.tree
+                in_tree = [n for n in victims if n in tree.nodes() or n in tree.members]
+                if not in_tree:
+                    continue
+                orphans = [
+                    c for n in in_tree for c in tree.children.get(n, [])
+                    if c not in victims
+                ]
+                report = self.system.fail_nodes(tree.app_id, in_tree)
+                recovery_ms = max(recovery_ms, report.recovery_time_ms)
+                for o in orphans:  # re-grafted subtrees stall for the repair
+                    self._delay_until[(ai, o)] = t + report.recovery_time_ms
+            for n in victims:
+                self._failed.add(n)
+                for ai in range(len(self.handles)):
+                    key = (ai, n)
+                    ev = self._pending_ev.pop(key, None)
+                    if ev is not None:
+                        self.cancel(ev)
+                    self._version_at_start.pop(key, None)
+                    if self.trainer is not None:
+                        self.trainer.drop(ai, n)
+            self.churn_log.append(
+                ChurnRecord(t, "fail", tuple(victims), recovery_ms=recovery_ms)
+            )
+            self.schedule(
+                self.churn.downtime_ms,
+                lambda tt, victims=victims, info=rejoin_info: self._on_churn_rejoin(
+                    tt, victims, info
+                ),
+            )
+        self._schedule_churn()
+
+    def _on_churn_rejoin(self, t: float, victims: list[int], info: dict) -> None:
+        overlay = self.system.overlay
+        rejoined = []
+        for n in victims:
+            if n in overlay.alive:
+                continue
+            zone, suffix, coord, bw = info[n]
+            try:
+                overlay.join(zone, suffix, coord, bw)
+            except ValueError:
+                continue  # its id got reused while it was away
+            rejoined.append(n)
+            self._failed.discard(n)
+            for ai, h in enumerate(self.handles):
+                if n in self._orig_workers[ai]:
+                    self.system.Subscribe(h.tree.app_id, n)
+                    self._start_cycle(ai, n)
+        if rejoined:
+            self.churn_log.append(ChurnRecord(t, "rejoin", tuple(rejoined)))
+
+    # -- driver ----------------------------------------------------------------
+
+    def run(self, applies: int = 1, *, max_events: int = 1_000_000) -> list[ApplyEvent]:
+        """Run every app until it has performed ``applies`` buffered
+        updates; returns the ``ApplyEvent`` history in clock order."""
+        self._reset_clock()
+        self._applies_target = applies
+        n = len(self.handles)
+        self._version = [0] * n
+        self._buffer = [[] for _ in range(n)]
+        self._done = [False] * n
+        self._cycle.clear()
+        self._version_at_start.clear()
+        self._pending_ev.clear()
+        self._delay_until.clear()
+        self._failed.clear()
+        self.history = []
+        self.churn_log = []
+        self._orig_workers = [set(self._workers(ai)) for ai in range(n)]
+        for ai in range(n):
+            if not self._workers(ai):
+                self._done[ai] = True
+            for w in self._workers(ai):
+                self._start_cycle(ai, w)
+        self._schedule_churn()
+        self.run_events(max_events=max_events, stop=lambda: all(self._done))
+        return list(self.history)
 
 
 def per_app_round_ms(history: list[RoundEvent]) -> dict[int, list[float]]:
@@ -158,4 +604,12 @@ def per_app_round_ms(history: list[RoundEvent]) -> dict[int, list[float]]:
     out: dict[int, list[float]] = {}
     for ev in sorted(history, key=lambda e: (e.app_id, e.round)):
         out.setdefault(ev.app_id, []).append(ev.duration_ms)
+    return out
+
+
+def per_app_apply_ms(history: list[ApplyEvent]) -> dict[int, list[float]]:
+    """app_id -> apply completion times (ms), in apply order."""
+    out: dict[int, list[float]] = {}
+    for ev in sorted(history, key=lambda e: (e.app_id, e.apply_index)):
+        out.setdefault(ev.app_id, []).append(ev.time_ms)
     return out

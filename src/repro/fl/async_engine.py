@@ -1,0 +1,194 @@
+"""Async buffered FL data plane: real training under the event clock.
+
+``AsyncTrainer`` is the data-plane counterpart of
+``core/sim.AsyncBufferScheduler``: the scheduler decides *when* a
+worker's download / compute / upload events fire; the trainer decides
+*what* those events mean for the model.  It threads per-worker model
+versions through the system — a worker trains from the (possibly stale)
+global version it downloaded, and the master keeps every version that
+still has in-flight workers so their deltas can be reproduced exactly.
+
+The actual gradient work is the same jitted path the synchronous engine
+uses: when an apply fires, the buffered commits are grouped by model
+version and each group runs through ``engine.batched_local_train`` as
+one vmap (one XLA dispatch per version, not per worker).  Deltas then
+flow through the Table-II async verbs — ``CommitDelta`` per worker
+(per-edge traffic up the tree) and one ``ApplyBuffered`` (staleness
+discount folded into the ``tree_aggregate_groups`` kernel's weight
+vector) — so with a full buffer of staleness-0 commits and alpha = 0 the
+applied update equals the synchronous round's aggregate to fp tolerance
+(tests/test_async.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.fl import engine
+
+
+class AsyncTrainer:
+    """Per-app version store + buffered-apply data plane.
+
+    ``apps``: ``fl/rounds.FLApp`` instances (params, shards, hyperparams).
+    ``staleness_alpha``: exponent of the 1/(1+s)^a weight discount.
+    """
+
+    def __init__(self, system, apps, *, staleness_alpha: float = 0.5, replicate: bool = True):
+        self.system = system
+        self.apps = list(apps)
+        self.staleness_alpha = float(staleness_alpha)
+        self.replicate = replicate
+        n = len(self.apps)
+        self.version = [0] * n
+        self._snapshots = [{0: a.params} for a in self.apps]  # version -> params
+        self._refs = [{0: 0} for _ in range(n)]  # version -> in-flight users
+        self._worker_version = [dict() for _ in range(n)]  # worker -> version
+        self._pending = [[] for _ in range(n)]  # committed (worker, version)
+        self.history: list[dict] = []
+
+    # -- scheduler hooks -------------------------------------------------------
+
+    def workers(self, ai: int) -> list[int]:
+        app = self.apps[ai]
+        return [w for w in sorted(app.handle.tree.members) if w in app.data]
+
+    def begin_download(self, ai: int, w: int) -> None:
+        """The master transmits the current version to ``w``: pin it."""
+        v = self.version[ai]
+        self._worker_version[ai][w] = v
+        self._refs[ai][v] = self._refs[ai].get(v, 0) + 1
+
+    def commit(self, ai: int, w: int, t: float) -> None:
+        """``w``'s upload landed: move it to the apply queue (its delta is
+        materialized lazily at apply time, batched with its version peers)."""
+        v = self._worker_version[ai].pop(w)
+        self._pending[ai].append((w, v))
+
+    def drop(self, ai: int, w: int) -> None:
+        """``w`` failed mid-cycle: release its version pin.  Commits it
+        already delivered stay buffered — the master has them."""
+        v = self._worker_version[ai].pop(w, None)
+        if v is not None:
+            self._refs[ai][v] -= 1
+
+    def apply(self, ai: int, t: float) -> dict | None:
+        """Buffer is full: train each version group, commit the deltas,
+        apply the staleness-weighted update, bump the global version."""
+        app = self.apps[ai]
+        pending, self._pending[ai] = self._pending[ai], []
+        if not pending:  # commit batch drained (e.g. by churn)
+            return None
+        cur = self.version[ai]
+        groups: dict[int, list[int]] = {}
+        for w, v in pending:
+            groups.setdefault(v, []).append(w)
+        losses, loss_weights = [], []
+        for v in sorted(groups):
+            ws = groups[v]
+            deltas, weights, group_losses = engine.local_training(
+                app, ws, params=self._snapshots[ai][v]
+            )
+            for w, d, wt, l in zip(ws, deltas, weights, group_losses):
+                self.system.CommitDelta(
+                    app.handle.app_id, w, d, weight=wt, staleness=cur - v
+                )
+                losses.append(l)
+                loss_weights.append(wt)
+            self._refs[ai][v] -= len(ws)
+        stats = self.system.ApplyBuffered(
+            app.handle.app_id, staleness_alpha=self.staleness_alpha
+        )
+        agg = stats["result"]
+        app.params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype), app.params, agg)
+        app.round_num += 1
+        self.version[ai] = cur + 1
+        self._snapshots[ai][cur + 1] = app.params
+        self._refs[ai][cur + 1] = self._refs[ai].get(cur + 1, 0)
+        self._gc_snapshots(ai)
+        if self.replicate:
+            self.system.replicate_master_state(
+                app.handle.app_id, {"round": app.round_num, "version": cur + 1}
+            )
+        record = {
+            "app_id": app.handle.app_id,
+            "t_ms": t,
+            "version": cur + 1,
+            "arrivals": len(pending),
+            "loss": float(np.average(losses, weights=loss_weights)),
+            "mean_staleness": float(np.mean([cur - v for _, v in pending])),
+        }
+        self.history.append(record)
+        app.history.append(record)
+        return record
+
+    def _gc_snapshots(self, ai: int) -> None:
+        """Drop param versions no in-flight worker can still reference."""
+        cur = self.version[ai]
+        for v in [v for v, r in self._refs[ai].items() if r <= 0 and v != cur]:
+            self._refs[ai].pop(v)
+            self._snapshots[ai].pop(v, None)
+
+
+def run_async(
+    system,
+    apps,
+    *,
+    applies: int,
+    buffer_k: int | list[int],
+    staleness_alpha: float = 0.5,
+    model_bytes: float,
+    compute_ms=50.0,
+    base_ms: float = 5.0,
+    churn=None,
+    barrier: bool = False,
+) -> dict:
+    """Wire an ``AsyncTrainer`` under an ``AsyncBufferScheduler`` and run
+    every app to ``applies`` buffered updates.  Returns the scheduler
+    apply events, churn log, and the trainer's loss-vs-simtime history."""
+    from repro.core.sim import AsyncBufferScheduler
+
+    trainer = AsyncTrainer(system, apps, staleness_alpha=staleness_alpha)
+    sched = AsyncBufferScheduler(
+        system,
+        [a.handle for a in apps],
+        model_bytes=model_bytes,
+        compute_ms=compute_ms,
+        base_ms=base_ms,
+        buffer_k=buffer_k,
+        churn=churn,
+        trainer=trainer,
+        barrier=barrier,
+    )
+    events = sched.run(applies)
+    return {
+        "events": events,
+        "churn": list(sched.churn_log),
+        "history": list(trainer.history),
+        "trainer": trainer,
+        "scheduler": sched,
+    }
+
+
+def worker_compute_fn(base_ms: float = 40.0, spread: float = 6.0, seed: int = 0):
+    """Deterministic heterogeneous edge-compute model: each (app, worker)
+    draws a fixed slowdown in [1, spread] from a seeded hash — the same
+    worker is always the same straggler, for sync and async alike."""
+
+    def per_worker(handle, worker, cycle: int = 0):
+        rng = np.random.default_rng([seed, handle.app_id, worker])
+        return base_ms * (1.0 + (spread - 1.0) * float(rng.random()))
+
+    return per_worker
+
+
+def sync_barrier_compute_fn(per_worker):
+    """Sync counterpart of a per-worker compute model: the barrier round
+    waits for the slowest subscribed worker."""
+
+    def f(handle, round_num):
+        members = sorted(handle.tree.members)
+        return max((per_worker(handle, w) for w in members), default=0.0)
+
+    return f

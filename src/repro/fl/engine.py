@@ -30,6 +30,9 @@ def pack_shards(data_by_worker: dict, workers: list[int]):
     Returns (x, y, mask): x (W, B, *feat) f32, y (W, B) i32, mask (W, B)
     f32 with 1.0 on real examples, 0.0 on padding.
     """
+    if not workers:  # a drained commit batch: empty padded stacks, not max([])
+        z = np.zeros((0, 0), np.float32)
+        return jnp.asarray(z), jnp.asarray(z, jnp.int32), jnp.asarray(z)
     bs = [len(data_by_worker[w][1]) for w in workers]
     B = max(bs)
     x0 = np.asarray(data_by_worker[workers[0]][0])
@@ -81,13 +84,19 @@ def batched_local_train(global_params, x, y, mask, *, logits_fn, steps: int, lr:
     return jax.vmap(one_worker)(x, y, mask)
 
 
-def local_training(app, workers: list[int], *, vectorized: bool = True):
+def local_training(app, workers: list[int], *, vectorized: bool = True, params=None):
     """Run the app's E local steps on every worker's shard.
 
     Returns (deltas, weights, losses) with one entry per worker, in
     ``workers`` order — deltas are model-update pytrees, weights the
     shard sizes (FedAvg weighting), losses the mean local losses.
+    ``params`` overrides the starting model (the async path trains each
+    commit batch from the — possibly stale — version its workers
+    downloaded, not from ``app.params``).
     """
+    if not workers:
+        return [], [], []
+    start = app.params if params is None else params
     logits_fn = sm.LOGITS[app.model]
     weights = [float(len(app.data[w][1])) for w in workers]
     if not vectorized:
@@ -95,19 +104,19 @@ def local_training(app, workers: list[int], *, vectorized: bool = True):
         for w in workers:
             x, y = app.data[w]
             new_p, loss = sm.local_train(
-                app.params, app.params, x, y,
+                start, start, x, y,
                 logits_fn=logits_fn, steps=app.local_steps, lr=app.lr, mu=app.mu,
             )
-            deltas.append(jax.tree.map(lambda a, b: a - b, new_p, app.params))
+            deltas.append(jax.tree.map(lambda a, b: a - b, new_p, start))
             losses.append(float(loss))
         return deltas, weights, losses
 
     x, y, mask = pack_shards(app.data, workers)
     new_params, losses = batched_local_train(
-        app.params, x, y, mask,
+        start, x, y, mask,
         logits_fn=logits_fn, steps=app.local_steps, lr=app.lr, mu=app.mu,
     )
-    stacked = jax.tree.map(lambda n, p: n - p[None], new_params, app.params)
+    stacked = jax.tree.map(lambda n, p: n - p[None], new_params, start)
     # one device->host transfer per leaf, then cheap numpy row views —
     # per-worker device slicing would cost W x leaves dispatches
     stacked_np = jax.tree.map(np.asarray, stacked)

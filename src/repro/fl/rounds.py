@@ -79,6 +79,35 @@ def run_round(
     return engine.run_round(system, app, use_kernel=use_kernel, vectorized=vectorized)
 
 
+def run_async(
+    system: TotoroSystem,
+    apps: list[FLApp],
+    *,
+    applies: int,
+    buffer_k: int | list[int],
+    staleness_alpha: float = 0.5,
+    model_bytes: float,
+    compute_ms=50.0,
+    churn=None,
+    barrier: bool = False,
+) -> dict:
+    """FedBuff-style buffered-async rounds on the event clock.
+
+    Delegates to ``fl/async_engine.run_async``: every worker's
+    download / compute / upload is its own simulator event, the master
+    applies a staleness-weighted update after ``buffer_k`` arrivals
+    (``CommitDelta``/``ApplyBuffered`` verbs), and optional ``churn``
+    (``core.sim.ChurnModel``) fails/rejoins workers mid-round.
+    """
+    from repro.fl import async_engine
+
+    return async_engine.run_async(
+        system, apps, applies=applies, buffer_k=buffer_k,
+        staleness_alpha=staleness_alpha, model_bytes=model_bytes,
+        compute_ms=compute_ms, churn=churn, barrier=barrier,
+    )
+
+
 def evaluate(app: FLApp, x, y) -> float:
     return float(sm.accuracy(sm.LOGITS[app.model](app.params, x), y))
 

@@ -45,22 +45,45 @@ def tree_aggregate_groups(grads: jax.Array, weights: jax.Array) -> jax.Array:
     return out[:, : grads.shape[2]]
 
 
+def _stack_pytrees(updates: list) -> jax.Array:
+    """(C, L) f32 stack of flattened update pytrees."""
+    return jnp.stack([
+        jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(u)])
+        for u in updates
+    ])
+
+
+def _unflatten_like(vec: jax.Array, like) -> object:
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        out.append(vec[off : off + l.size].reshape(l.shape))
+        off += l.size
+    return jax.tree.unflatten(treedef, out)
+
+
 def tree_aggregate_pytree(updates: list, weights) -> object:
     """Aggregate a list of model-update pytrees with the kernel."""
     w = jnp.asarray(weights, jnp.float32)
-    flats = [
-        jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(u)])
-        for u in updates
-    ]
-    stacked = jnp.stack(flats)  # (C, L)
-    agg = tree_aggregate(stacked, w)
-    # unflatten back into the first update's structure
-    leaves, treedef = jax.tree.flatten(updates[0])
-    out, off = [], 0
-    for l in leaves:
-        out.append(agg[off : off + l.size].reshape(l.shape))
-        off += l.size
-    return jax.tree.unflatten(treedef, out)
+    agg = tree_aggregate(_stack_pytrees(updates), w)
+    return _unflatten_like(agg, updates[0])
+
+
+def buffered_aggregate(updates: list, weights, staleness, *, alpha: float = 0.5):
+    """Staleness-weighted buffered aggregate (async FedBuff apply).
+
+    The K buffered deltas form ONE (1, K, L) group through the batched
+    ``tree_aggregate_groups`` kernel with the staleness discount
+    ``w_i / (1+s_i)^alpha`` folded into its weight vector; the weighted
+    sum is normalized by the combined weight so a full uniform-staleness
+    buffer at alpha's no-op point matches synchronous FedAvg exactly.
+
+    Returns (aggregate pytree, combined weights (K,) f32).
+    """
+    w = _ta.staleness_weights(weights, staleness, alpha)
+    stacked = _stack_pytrees(updates)[None]  # (1, K, L)
+    agg = tree_aggregate_groups(stacked, w[None])[0] / jnp.maximum(w.sum(), 1e-12)
+    return _unflatten_like(agg, updates[0]), w
 
 
 def qsgd_quantize(x: jax.Array, rand: jax.Array):

@@ -20,6 +20,19 @@ from jax.experimental import pallas as pl
 TILE = 1024
 
 
+def staleness_weights(weights, staleness, alpha: float):
+    """FedBuff-style staleness discount: w_i / (1 + s_i)^alpha.
+
+    This is the *only* change the async buffered path makes to the
+    aggregation math — the discounted weights ride the existing kernels'
+    weight vector, so alpha = 0 (or all-zero staleness) reproduces the
+    synchronous weighted mean bit-for-bit.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(staleness, jnp.float32)
+    return w * (1.0 + s) ** (-float(alpha))
+
+
 def _kernel(g_ref, w_ref, o_ref):
     g = g_ref[...].astype(jnp.float32)  # (C, TILE)
     w = w_ref[...].astype(jnp.float32)  # (C, 1)
