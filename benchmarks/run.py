@@ -1,6 +1,14 @@
-# One function per paper table/figure. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper table/figure.
+
+``python -m benchmarks.run`` runs every registered bench and prints
+``name,us_per_call,derived`` CSV rows.  ``--help`` lists the registry
+with a one-line description per bench; ``--only NAME`` (repeatable)
+restricts the run to named entries.
+"""
 from __future__ import annotations
 
+import argparse
+import importlib
 import os
 import sys
 import traceback
@@ -8,39 +16,68 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+# (name, module, description) — every bench registers a real one-line
+# description here, surfaced by --help without importing the module (a
+# broken bench must not take down the driver's help or other benches).
+REGISTRY: list[tuple[str, str, str]] = [
+    ("engine+sim(TabIII)", "benchmarks.bench_engine",
+     "vectorized round engine vs per-worker loop; M-app event simulator vs centralized baseline"),
+    ("async_vs_sync(FedBuff)", "benchmarks.bench_async",
+     "sync vs fixed-K vs adaptive-K vs adaptive-K+utility time-to-target-loss under churn"),
+    ("scalability(Fig5)", "benchmarks.bench_scalability",
+     "overlay join/route cost vs network size"),
+    ("hops(Fig6)", "benchmarks.bench_hops",
+     "dataflow-tree path lengths vs DHT routing bounds"),
+    ("traffic(Fig7)", "benchmarks.bench_traffic",
+     "per-round bytes on the tree vs flat aggregation"),
+    ("time_to_accuracy(TabIII/Fig8-9)", "benchmarks.bench_time_to_accuracy",
+     "FedAvg/FedProx rounds to target accuracy on non-IID shards"),
+    ("adaptivity(Fig11-14)", "benchmarks.bench_adaptivity",
+     "tree re-planning quality under membership and bandwidth drift"),
+    ("runtime(Fig15-16)", "benchmarks.bench_runtime",
+     "end-to-end simulated round time across model sizes"),
+    ("recovery(Fig17-18)", "benchmarks.bench_recovery",
+     "master/worker failure repair latency and state-restore hit rate"),
+    ("overhead(Fig19)", "benchmarks.bench_overhead",
+     "control-plane overhead of the Table-II verbs"),
+    ("kernels", "benchmarks.bench_kernels",
+     "Pallas tree_aggregate / tree_aggregate_groups vs XLA reference"),
+]
 
-def main() -> None:
-    from benchmarks import (
-        bench_adaptivity,
-        bench_async,
-        bench_engine,
-        bench_hops,
-        bench_kernels,
-        bench_overhead,
-        bench_recovery,
-        bench_scalability,
-        bench_time_to_accuracy,
-        bench_traffic,
-        bench_runtime,
+
+def _registry_help() -> str:
+    width = max(len(n) for n, _, _ in REGISTRY)
+    lines = ["registered benches:"]
+    for name, _, desc in REGISTRY:
+        lines.append(f"  {name:<{width}}  {desc}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description=__doc__,
+        epilog=_registry_help(),
+        formatter_class=argparse.RawDescriptionHelpFormatter,
     )
+    ap.add_argument(
+        "--only", action="append", default=None, metavar="NAME",
+        help="run only the named bench (repeatable; names as listed below)",
+    )
+    args = ap.parse_args(argv)
+    selected = REGISTRY
+    if args.only:
+        known = {n for n, _, _ in REGISTRY}
+        unknown = [n for n in args.only if n not in known]
+        if unknown:
+            ap.error(f"unknown bench name(s): {unknown}; known: {sorted(known)}")
+        selected = [r for r in REGISTRY if r[0] in args.only]
 
-    modules = [
-        ("engine+sim(TabIII)", bench_engine),
-        ("async_vs_sync(FedBuff)", bench_async),
-        ("scalability(Fig5)", bench_scalability),
-        ("hops(Fig6)", bench_hops),
-        ("traffic(Fig7)", bench_traffic),
-        ("time_to_accuracy(TabIII/Fig8-9)", bench_time_to_accuracy),
-        ("adaptivity(Fig11-14)", bench_adaptivity),
-        ("runtime(Fig15-16)", bench_runtime),
-        ("recovery(Fig17-18)", bench_recovery),
-        ("overhead(Fig19)", bench_overhead),
-        ("kernels", bench_kernels),
-    ]
     print("name,us_per_call,derived")
     failures = 0
-    for label, mod in modules:
+    for label, mod_name, _ in selected:
         try:
+            mod = importlib.import_module(mod_name)
             for line in mod.run():
                 print(line, flush=True)
         except Exception:

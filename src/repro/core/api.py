@@ -48,6 +48,9 @@ class AppHandle:
     traffic_bytes: float = 0.0
     version: int = 0  # bumped by ApplyBuffered (async model version)
     buffer: list[BufferedDelta] = field(default_factory=list)
+    # per-apply telemetry appended by ApplyBuffered: version, arrivals,
+    # effective K, staleness histogram, selector utility scores
+    round_records: list[dict] = field(default_factory=list)
 
 
 class TotoroSystem:
@@ -189,7 +192,15 @@ class TotoroSystem:
             "buffered": len(h.buffer),
         }
 
-    def ApplyBuffered(self, app_id: int, *, staleness_alpha: float = 0.5, min_k: int = 1) -> dict:
+    def ApplyBuffered(
+        self,
+        app_id: int,
+        *,
+        staleness_alpha: float = 0.5,
+        min_k: int = 1,
+        k: int | None = None,
+        selector_scores: dict | None = None,
+    ) -> dict:
         """Drain the buffer into one staleness-weighted aggregate.
 
         Weights ``w_i / (1 + staleness_i)^alpha`` are folded into the
@@ -198,6 +209,12 @@ class TotoroSystem:
         full uniform-staleness buffer the result is exactly the
         synchronous FedAvg weighted mean.  Returns ``result=None`` when
         fewer than ``min_k`` commits are buffered (buffer untouched).
+
+        ``k`` (the scheduler's effective buffer threshold for this
+        apply) and ``selector_scores`` (per-client utilities) are
+        optional caller telemetry; every successful apply appends a
+        record — version, arrivals, K, staleness histogram, scores — to
+        the handle's ``round_records``.
         """
         from repro.kernels.ops import buffered_aggregate
         from repro.kernels.tree_aggregate import staleness_weights
@@ -224,14 +241,27 @@ class TotoroSystem:
                 alpha=staleness_alpha,
             )
         h.version += 1
+        stal = [e.staleness for e in entries]
+        hist = np.bincount(np.asarray(stal, np.int64)).tolist() if entries else []
         stats = {
             "result": result,
             "arrivals": len(entries),
             "workers": [e.worker for e in entries],
-            "staleness": [e.staleness for e in entries],
+            "staleness": stal,
+            "staleness_hist": hist,  # hist[s] = commits applied at staleness s
             "weights": None if combined is None else [float(w) for w in combined],
             "version": h.version,
+            "k": len(entries) if k is None else int(k),
         }
+        h.round_records.append(
+            {
+                "version": h.version,
+                "arrivals": len(entries),
+                "k": stats["k"],
+                "staleness_hist": hist,
+                "selector_scores": selector_scores,
+            }
+        )
         if h.on_aggregate:
             h.on_aggregate(app_id, result)
         return stats

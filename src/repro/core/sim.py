@@ -21,10 +21,25 @@ This module splits that into an event core plus two schedulers:
   arrivals.  A ``ChurnModel`` injects fail/rejoin events on the *same*
   clock, driving ``core/recovery.fail_and_recover`` mid-round so repair
   latency lands on the timeline.
+- ``AdaptiveKController`` (this PR) closes the loop on K: instead of a
+  fixed buffer size, each buffered apply re-sizes K from the observed
+  commit inter-arrival rate (EMA of arrivals per simulated millisecond)
+  and the staleness distribution (a target percentile), clamped to
+  ``[k_min, live membership]`` so churn can neither stall the buffer
+  nor let K reference dead workers.  ``adaptive=False`` (the default)
+  takes the exact PR-2 fixed-K code path — trace-identical, asserted by
+  tests/test_selection.py.  Client admission is equally pluggable: a
+  ``fl/selection.ClientSelector`` gates each worker's next cycle
+  (utility-based straggler avoidance), with ``selector=None`` /
+  ``UniformSelector`` preserving the admit-everyone behavior.
 
+Units and invariants: the clock is simulated milliseconds (``now``,
+every ``*_ms``); transfer sizes are bytes (``model_bytes``), converted
+once to megabits for ``CongestionEnv``; staleness is counted in model
+*versions* (applies elapsed since the worker's download), not time.
 Everything is deterministic: ties on the clock break by event sequence
-number, churn draws come from a seeded generator owned by the model, and
-the congestion pricing has no stochastic terms.
+number, churn and selection draws come from seeded generators owned by
+their models, and the congestion pricing has no stochastic terms.
 """
 from __future__ import annotations
 
@@ -56,7 +71,10 @@ class RoundEvent:
 @dataclass(frozen=True)
 class ApplyEvent:
     """One buffered apply at an app's master: the async analogue of a
-    round completion (K deltas arrived, staleness-weighted update done)."""
+    round completion (K deltas arrived, staleness-weighted update done).
+    ``k`` is the effective buffer threshold that triggered this apply —
+    the constructor K (clamped to live membership) in fixed mode, the
+    controller's current K in adaptive mode."""
 
     app_id: int
     apply_index: int
@@ -64,6 +82,7 @@ class ApplyEvent:
     arrivals: int
     mean_staleness: float
     max_staleness: float
+    k: int = 0
 
 
 @dataclass(frozen=True)
@@ -319,6 +338,104 @@ class ChurnModel:
         return self.max_fail_events is not None and self.fired >= self.max_fail_events
 
 
+class AdaptiveKController:
+    """Per-app feedback controller for the async buffer size K.
+
+    The fixed-K scheduler has a built-in tension: small K applies
+    eagerly (fast wall-clock progress, but every apply bumps the model
+    version, so in-flight workers land with higher *staleness*), large K
+    degenerates toward the barrier (low staleness, straggler-bound).
+    This controller re-sizes K after every buffered apply from two
+    observations:
+
+    - **staleness feedback**: let ``p`` be the ``percentile``-th
+      percentile of the staleness values (in model versions) in the
+      buffer just applied.  K moves multiplicatively toward the
+      ``target_staleness``: ``K *= 1 + gain * (p - target) / target``,
+      with the per-apply multiplier clamped to [0.5, 2.0] — staleness
+      above target grows K (fewer version bumps per cycle), below
+      target shrinks it (apply more eagerly).
+    - **arrival rate**: an EMA of commit arrivals per simulated
+      millisecond (``arrivals_per_ms``, smoothed by ``arrival_beta``).
+      With ``max_apply_interval_ms`` set, K is capped at
+      ``rate * max_apply_interval_ms`` so the expected buffer fill time
+      ``K / rate`` never exceeds the interval — under churn the rate
+      drops and the cap pulls K down before the buffer can stall.
+
+    The result is clamped to ``[k_min, min(k_max, live_workers)]``;
+    live membership comes from the scheduler each apply, so failed
+    workers can never be counted toward K.  ``history`` records
+    ``(t_ms, k, staleness_percentile, arrivals_per_ms)`` per apply for
+    telemetry.  Fully deterministic — no random draws.
+    """
+
+    def __init__(
+        self,
+        *,
+        k_init: int = 8,
+        k_min: int = 1,
+        k_max: int | None = None,
+        target_staleness: float = 1.5,
+        percentile: float = 90.0,
+        gain: float = 0.5,
+        arrival_beta: float = 0.2,
+        max_apply_interval_ms: float | None = None,
+    ):
+        self.k_min = max(1, int(k_min))
+        self.k_max = None if k_max is None else int(k_max)
+        self.k = float(max(self.k_min, int(k_init)))
+        self.target_staleness = float(target_staleness)
+        self.percentile = float(percentile)
+        self.gain = float(gain)
+        self.arrival_beta = float(arrival_beta)
+        self.max_apply_interval_ms = max_apply_interval_ms
+        self.arrivals_per_ms = 0.0
+        self._last_commit_ms: float | None = None
+        self._tied_arrivals = 0
+        self.history: list[tuple[float, int, float, float]] = []
+
+    @property
+    def current_k(self) -> int:
+        return max(self.k_min, int(round(self.k)))
+
+    def on_commit(self, t_ms: float) -> None:
+        """One commit landed: fold its inter-arrival into the rate EMA.
+        Commits tied on the clock (same event timestamp) are folded into
+        one batch so a tie can never masquerade as an infinite rate."""
+        if self._last_commit_ms is None:
+            self._last_commit_ms = t_ms
+            self._tied_arrivals = 1
+            return
+        dt = t_ms - self._last_commit_ms
+        if dt <= 1e-9:
+            self._tied_arrivals += 1
+            return
+        inst = self._tied_arrivals / dt
+        if self.arrivals_per_ms == 0.0:
+            self.arrivals_per_ms = inst
+        else:
+            self.arrivals_per_ms = (
+                self.arrival_beta * inst + (1.0 - self.arrival_beta) * self.arrivals_per_ms
+            )
+        self._last_commit_ms = t_ms
+        self._tied_arrivals = 1
+
+    def on_apply(self, t_ms: float, staleness: list[int], live_workers: int) -> int:
+        """One buffered apply finished: update K and return the new value."""
+        p = float(np.percentile(staleness, self.percentile)) if staleness else 0.0
+        err = (p - self.target_staleness) / max(self.target_staleness, 1e-6)
+        mult = float(np.clip(1.0 + self.gain * err, 0.5, 2.0))
+        k = self.k * mult
+        if self.max_apply_interval_ms is not None and self.arrivals_per_ms > 0.0:
+            k = min(k, self.arrivals_per_ms * float(self.max_apply_interval_ms))
+        hi = float(live_workers) if live_workers > 0 else k
+        if self.k_max is not None:
+            hi = min(hi, float(self.k_max))
+        self.k = float(np.clip(k, float(self.k_min), max(float(self.k_min), hi)))
+        self.history.append((t_ms, self.current_k, p, self.arrivals_per_ms))
+        return self.current_k
+
+
 class AsyncBufferScheduler(EventCore):
     """FedBuff-style buffered-asynchronous execution on the event clock.
 
@@ -347,6 +464,19 @@ class AsyncBufferScheduler(EventCore):
     failed workers' in-flight events are cancelled, affected trees are
     repaired through ``core/recovery.fail_and_recover`` on the same
     clock, and re-grafted orphans stall for the repair latency.
+
+    Two control knobs are pluggable (both default OFF, preserving the
+    PR-2 trace exactly):
+
+    - ``adaptive=True`` replaces the fixed ``buffer_k`` with one
+      ``AdaptiveKController`` per app (``buffer_k`` becomes K's initial
+      value; ``adaptive_kwargs`` forwards controller config).  The live
+      controllers are exposed as ``self.controllers`` after ``run()``.
+    - ``selector`` (an ``fl/selection.ClientSelector``) gates every
+      would-be worker cycle: declined workers are *parked* and
+      re-offered at their app's next apply.  A liveness guard force-
+      admits when fewer than K workers are in flight, so selection can
+      never deadlock the buffer.
     """
 
     def __init__(
@@ -361,6 +491,9 @@ class AsyncBufferScheduler(EventCore):
         churn: ChurnModel | None = None,
         trainer=None,
         barrier: bool = False,
+        adaptive: bool = False,
+        adaptive_kwargs: dict | None = None,
+        selector=None,
     ):
         super().__init__(system, handles, model_bytes=model_bytes, base_ms=base_ms)
         self.compute_ms = compute_ms
@@ -372,6 +505,10 @@ class AsyncBufferScheduler(EventCore):
             self.buffer_k = list(buffer_k)
         assert len(self.buffer_k) == len(self.handles)
         self.churn = churn
+        self.adaptive = bool(adaptive)
+        self.adaptive_kwargs = dict(adaptive_kwargs or {})
+        self.selector = selector
+        self.controllers: list[AdaptiveKController | None] = []
         self.history: list[ApplyEvent] = []
         self.churn_log: list[ChurnRecord] = []
         # per-app run state (filled by run())
@@ -382,6 +519,8 @@ class AsyncBufferScheduler(EventCore):
         self._version_at_start: dict[tuple[int, int], int] = {}
         self._pending_ev: dict[tuple[int, int], int] = {}
         self._delay_until: dict[tuple[int, int], float] = {}
+        self._cycle_start: dict[tuple[int, int], float] = {}
+        self._parked: list[set[int]] = []
         self._failed: set[int] = set()
         self._orig_workers: list[set[int]] = []
         self._applies_target = 1
@@ -397,9 +536,12 @@ class AsyncBufferScheduler(EventCore):
         return [w for w in self._workers(ai) if w not in self._failed]
 
     def _effective_k(self, ai: int) -> int:
-        """Clamp K to the live membership so churn can't stall the buffer."""
+        """Clamp K to the live membership so churn can't stall the buffer.
+        In adaptive mode the base K comes from the app's controller."""
+        ctrl = self.controllers[ai] if self.controllers else None
+        k = ctrl.current_k if ctrl is not None else self.buffer_k[ai]
         live = len(self._live_workers(ai))
-        return max(1, min(self.buffer_k[ai], live)) if live else self.buffer_k[ai]
+        return max(1, min(k, live)) if live else k
 
     # -- per-worker cycle ------------------------------------------------------
 
@@ -411,12 +553,35 @@ class AsyncBufferScheduler(EventCore):
         hops = path if up else list(reversed(path))
         return self.sender_indices(hops[:-1])
 
+    def _offer_cycle(self, ai: int, w: int) -> None:
+        """Gate a worker's next cycle through the selector (if any).
+
+        Declined workers are parked until the app's next apply.  The
+        liveness guard admits whenever fewer than K workers are in
+        flight — otherwise selection could park everyone and the buffer
+        would never fill.  The guard runs *before* the selector is
+        consulted, so a forced admission is not an offer: it neither
+        burns blocklist decay nor counts as a parked decline.
+        """
+        if self._done[ai] or w in self._failed:
+            return
+        if self.selector is None:
+            self._start_cycle(ai, w)
+            return
+        active = sum(1 for (a, _) in self._pending_ev if a == ai)
+        if active < self._effective_k(ai) or self.selector.admit(ai, w, self.now):
+            self._parked[ai].discard(w)
+            self._start_cycle(ai, w)
+        else:
+            self._parked[ai].add(w)
+
     def _start_cycle(self, ai: int, w: int) -> None:
         if self._done[ai] or w in self._failed:
             return
         key = (ai, w)
         delay = max(0.0, self._delay_until.pop(key, self.now) - self.now)
         self._version_at_start[key] = self._version[ai]
+        self._cycle_start[key] = self.now
         if self.trainer is not None:
             self.trainer.begin_download(ai, w)
         senders = self._path_senders(ai, w, up=False)
@@ -453,28 +618,38 @@ class AsyncBufferScheduler(EventCore):
         self._pending_ev.pop(key, None)
         self._cycle[key] = self._cycle.get(key, 0) + 1
         self._buffer[ai].append((w, self._version_at_start.pop(key)))
+        cyc_start = self._cycle_start.pop(key, None)
+        if self.selector is not None and cyc_start is not None:
+            self.selector.on_commit(ai, w, t, t - cyc_start)
+        if self.controllers and self.controllers[ai] is not None:
+            self.controllers[ai].on_commit(t)
         if self.trainer is not None:
             self.trainer.commit(ai, w, t)
         full = len(self._buffer[ai]) >= self._effective_k(ai)
         if full:
             self._apply(ai, t)
         if not self.barrier:
-            self._start_cycle(ai, w)  # next cycle begins immediately
+            self._offer_cycle(ai, w)  # next cycle begins immediately
         elif full:
             # release only workers idling at the barrier — anyone still
-            # mid-flight (K < W) finishes its current cycle first
+            # mid-flight (K < W) finishes its current cycle first; parked
+            # workers were already re-offered by _apply
             for lw in self._live_workers(ai):
-                if (ai, lw) not in self._pending_ev:
-                    self._start_cycle(ai, lw)
+                if (ai, lw) not in self._pending_ev and lw not in self._parked[ai]:
+                    self._offer_cycle(ai, lw)
 
     def _apply(self, ai: int, t: float) -> None:
         arrivals = self._buffer[ai]
         self._buffer[ai] = []
+        k_used = self._effective_k(ai)
         cur = self._version[ai]
         stal = [cur - v for _, v in arrivals]
         if self.trainer is not None:
-            self.trainer.apply(ai, t)
+            scores = self.selector.scores(ai) if self.selector is not None else None
+            self.trainer.apply(ai, t, k=k_used, selector_scores=scores)
         self._version[ai] = cur + 1
+        if self.controllers and self.controllers[ai] is not None:
+            self.controllers[ai].on_apply(t, stal, len(self._live_workers(ai)))
         self.history.append(
             ApplyEvent(
                 app_id=self.handles[ai].tree.app_id,
@@ -483,10 +658,16 @@ class AsyncBufferScheduler(EventCore):
                 arrivals=len(arrivals),
                 mean_staleness=float(np.mean(stal)) if stal else 0.0,
                 max_staleness=float(max(stal)) if stal else 0.0,
+                k=k_used,
             )
         )
         if self._version[ai] >= self._applies_target:
             self._done[ai] = True
+        elif self.selector is not None and self._parked[ai]:
+            # re-offer parked workers against the post-apply utilities
+            parked, self._parked[ai] = sorted(self._parked[ai]), set()
+            for w in parked:
+                self._offer_cycle(ai, w)
 
     # -- churn -----------------------------------------------------------------
 
@@ -537,11 +718,24 @@ class AsyncBufferScheduler(EventCore):
                     if ev is not None:
                         self.cancel(ev)
                     self._version_at_start.pop(key, None)
+                    self._cycle_start.pop(key, None)
+                    self._parked[ai].discard(n)
                     if self.trainer is not None:
                         self.trainer.drop(ai, n)
             self.churn_log.append(
                 ChurnRecord(t, "fail", tuple(victims), recovery_ms=recovery_ms)
             )
+            # failing in-flight workers may have drained an app below K
+            # active cycles while live workers sit parked — re-offer them
+            # now (the liveness guard force-admits), or nothing would
+            # ever commit again and parked workers would wait forever
+            if self.selector is not None:
+                for ai in range(len(self.handles)):
+                    if self._done[ai] or not self._parked[ai]:
+                        continue
+                    parked, self._parked[ai] = sorted(self._parked[ai]), set()
+                    for w in parked:
+                        self._offer_cycle(ai, w)
             self.schedule(
                 self.churn.downtime_ms,
                 lambda tt, victims=victims, info=rejoin_info: self._on_churn_rejoin(
@@ -566,7 +760,7 @@ class AsyncBufferScheduler(EventCore):
             for ai, h in enumerate(self.handles):
                 if n in self._orig_workers[ai]:
                     self.system.Subscribe(h.tree.app_id, n)
-                    self._start_cycle(ai, n)
+                    self._offer_cycle(ai, n)
         if rejoined:
             self.churn_log.append(ChurnRecord(t, "rejoin", tuple(rejoined)))
 
@@ -585,15 +779,23 @@ class AsyncBufferScheduler(EventCore):
         self._version_at_start.clear()
         self._pending_ev.clear()
         self._delay_until.clear()
+        self._cycle_start.clear()
+        self._parked = [set() for _ in range(n)]
         self._failed.clear()
         self.history = []
         self.churn_log = []
+        self.controllers = [
+            AdaptiveKController(**{"k_init": self.buffer_k[ai], **self.adaptive_kwargs})
+            if self.adaptive
+            else None
+            for ai in range(n)
+        ]
         self._orig_workers = [set(self._workers(ai)) for ai in range(n)]
         for ai in range(n):
             if not self._workers(ai):
                 self._done[ai] = True
             for w in self._workers(ai):
-                self._start_cycle(ai, w)
+                self._offer_cycle(ai, w)
         self._schedule_churn()
         self.run_events(max_events=max_events, stop=lambda: all(self._done))
         return list(self.history)

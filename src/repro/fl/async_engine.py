@@ -18,6 +18,20 @@ discount folded into the ``tree_aggregate_groups`` kernel's weight
 vector) — so with a full buffer of staleness-0 commits and alpha = 0 the
 applied update equals the synchronous round's aggregate to fp tolerance
 (tests/test_async.py).
+
+Units and invariants: times are simulated milliseconds from the
+scheduler's clock (``t_ms``); payload sizes are bytes (``model_bytes``
+and the verbs' ``bytes`` metrics); staleness is counted in model
+versions.  Version bookkeeping is refcounted — a snapshot is kept
+exactly as long as some in-flight worker may still commit against it
+(``_gc_snapshots``), and weight normalization happens once, inside
+``ApplyBuffered``'s kernel call, never per level.
+
+The trainer is also the feedback path for utility-based selection
+(``fl/selection.UtilitySelector``): at apply time it reports each
+client's fresh local loss and delta norm through ``selector.on_train``,
+giving the selector its statistical utility term; the scheduler
+separately reports observed cycle times (the system term).
 """
 from __future__ import annotations
 
@@ -33,13 +47,18 @@ class AsyncTrainer:
 
     ``apps``: ``fl/rounds.FLApp`` instances (params, shards, hyperparams).
     ``staleness_alpha``: exponent of the 1/(1+s)^a weight discount.
+    ``selector``: optional ``fl/selection.ClientSelector`` — fed each
+    client's local loss + delta norm at apply time (statistical utility).
     """
 
-    def __init__(self, system, apps, *, staleness_alpha: float = 0.5, replicate: bool = True):
+    def __init__(
+        self, system, apps, *, staleness_alpha: float = 0.5, replicate: bool = True, selector=None
+    ):
         self.system = system
         self.apps = list(apps)
         self.staleness_alpha = float(staleness_alpha)
         self.replicate = replicate
+        self.selector = selector
         n = len(self.apps)
         self.version = [0] * n
         self._snapshots = [{0: a.params} for a in self.apps]  # version -> params
@@ -73,9 +92,15 @@ class AsyncTrainer:
         if v is not None:
             self._refs[ai][v] -= 1
 
-    def apply(self, ai: int, t: float) -> dict | None:
+    def apply(self, ai: int, t: float, *, k: int | None = None, selector_scores=None) -> dict | None:
         """Buffer is full: train each version group, commit the deltas,
-        apply the staleness-weighted update, bump the global version."""
+        apply the staleness-weighted update, bump the global version.
+
+        ``k`` (the effective buffer threshold that triggered this apply)
+        and ``selector_scores`` (the selector's per-client utilities at
+        apply time) are telemetry from the scheduler; they ride into the
+        app handle's ``round_records`` via ``ApplyBuffered``.
+        """
         app = self.apps[ai]
         pending, self._pending[ai] = self._pending[ai], []
         if not pending:  # commit batch drained (e.g. by churn)
@@ -96,9 +121,24 @@ class AsyncTrainer:
                 )
                 losses.append(l)
                 loss_weights.append(wt)
+                if self.selector is not None:
+                    loss_val = float(l)
+                    if np.isfinite(loss_val):
+                        dnorm = 0.0  # loss is the stat signal; skip W host transfers
+                    else:
+                        dnorm = float(
+                            np.sqrt(
+                                sum(
+                                    float(np.sum(np.square(np.asarray(x))))
+                                    for x in jax.tree.leaves(d)
+                                )
+                            )
+                        )
+                    self.selector.on_train(ai, w, loss_val, dnorm)
             self._refs[ai][v] -= len(ws)
         stats = self.system.ApplyBuffered(
-            app.handle.app_id, staleness_alpha=self.staleness_alpha
+            app.handle.app_id, staleness_alpha=self.staleness_alpha,
+            k=k, selector_scores=selector_scores,
         )
         agg = stats["result"]
         app.params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype), app.params, agg)
@@ -116,6 +156,7 @@ class AsyncTrainer:
             "t_ms": t,
             "version": cur + 1,
             "arrivals": len(pending),
+            "k": k,
             "loss": float(np.average(losses, weights=loss_weights)),
             "mean_staleness": float(np.mean([cur - v for _, v in pending])),
         }
@@ -143,13 +184,21 @@ def run_async(
     base_ms: float = 5.0,
     churn=None,
     barrier: bool = False,
+    adaptive: bool = False,
+    adaptive_kwargs: dict | None = None,
+    selector=None,
 ) -> dict:
     """Wire an ``AsyncTrainer`` under an ``AsyncBufferScheduler`` and run
     every app to ``applies`` buffered updates.  Returns the scheduler
-    apply events, churn log, and the trainer's loss-vs-simtime history."""
+    apply events, churn log, and the trainer's loss-vs-simtime history.
+
+    ``adaptive=True`` turns on per-app ``AdaptiveKController``s
+    (``buffer_k`` seeds K); ``selector`` plugs a
+    ``fl/selection.ClientSelector`` into both the scheduler (admission,
+    cycle-time feedback) and the trainer (loss/delta-norm feedback)."""
     from repro.core.sim import AsyncBufferScheduler
 
-    trainer = AsyncTrainer(system, apps, staleness_alpha=staleness_alpha)
+    trainer = AsyncTrainer(system, apps, staleness_alpha=staleness_alpha, selector=selector)
     sched = AsyncBufferScheduler(
         system,
         [a.handle for a in apps],
@@ -160,6 +209,9 @@ def run_async(
         churn=churn,
         trainer=trainer,
         barrier=barrier,
+        adaptive=adaptive,
+        adaptive_kwargs=adaptive_kwargs,
+        selector=selector,
     )
     events = sched.run(applies)
     return {

@@ -90,6 +90,9 @@ def run_async(
     compute_ms=50.0,
     churn=None,
     barrier: bool = False,
+    adaptive: bool = False,
+    adaptive_kwargs: dict | None = None,
+    selector=None,
 ) -> dict:
     """FedBuff-style buffered-async rounds on the event clock.
 
@@ -98,6 +101,9 @@ def run_async(
     applies a staleness-weighted update after ``buffer_k`` arrivals
     (``CommitDelta``/``ApplyBuffered`` verbs), and optional ``churn``
     (``core.sim.ChurnModel``) fails/rejoins workers mid-round.
+    ``adaptive=True`` re-sizes K per apply (``core.sim
+    .AdaptiveKController``); ``selector`` plugs in utility-based client
+    admission (``fl/selection``).
     """
     from repro.fl import async_engine
 
@@ -105,6 +111,7 @@ def run_async(
         system, apps, applies=applies, buffer_k=buffer_k,
         staleness_alpha=staleness_alpha, model_bytes=model_bytes,
         compute_ms=compute_ms, churn=churn, barrier=barrier,
+        adaptive=adaptive, adaptive_kwargs=adaptive_kwargs, selector=selector,
     )
 
 

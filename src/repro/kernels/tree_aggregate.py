@@ -8,6 +8,24 @@ updates are the common case after compression).
 
 Grid: one program per tile of L; the full child dim C sits in VMEM
 (C <= 32 children per the fanout configs, TILE*C*4B << 16 MB VMEM).
+
+Units and invariants:
+
+- Inputs are *flattened* parameter vectors (f32/bf16 elements; sizes in
+  ``ops.py`` are tracked in bytes).  L must be a multiple of ``TILE`` —
+  callers pad, and padding slots MUST carry zero weight so they cannot
+  contribute to the sum (``tree_aggregate_groups``' ragged groups and
+  the phantom groups added for grid alignment both rely on this).
+- The kernels produce partial weighted *sums*, never means: weight
+  normalization happens exactly once, at the tree root (see
+  ``core/api._aggregate_hierarchical`` and ``ApplyBuffered``) — this is
+  what makes level-by-level aggregation associative and bit-compatible
+  (up to f32 reduction order) with the flat weighted mean.
+- ``staleness_weights`` is the *entire* async modification to the math:
+  the Table-II verbs ``CommitDelta``/``ApplyBuffered`` discount each
+  buffered commit's weight by ``1/(1+staleness)^alpha`` (staleness in
+  model versions) and feed the result through the same kernels'
+  weight vectors as the synchronous ``Aggregate`` verb.
 """
 from __future__ import annotations
 

@@ -1,0 +1,33 @@
+"""Docs surface: README/docs exist and intra-repo links resolve.
+
+The same checker gates CI (tools/check_links.py); running it under
+pytest keeps `python -m pytest` the single verify command.
+"""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    sys.path.insert(0, str(REPO / "tools"))
+    import check_links
+
+    return check_links
+
+
+def test_docs_exist():
+    assert (REPO / "README.md").is_file()
+    assert (REPO / "docs" / "architecture.md").is_file()
+    # README covers the newcomer path: quickstart + tier-1 verify
+    readme = (REPO / "README.md").read_text()
+    assert "examples/quickstart.py" in readme
+    assert "python -m pytest" in readme
+
+
+def test_intra_repo_links_resolve():
+    check_links = _checker()
+    files = list(check_links.iter_markdown([REPO / "README.md", REPO / "docs"]))
+    assert files, "README.md/docs/ missing"
+    errors = [e for f in files for e in check_links.check_file(f)]
+    assert not errors, "\n".join(errors)

@@ -1,0 +1,65 @@
+"""Intra-repo markdown link checker for README.md and docs/.
+
+Scans markdown files for ``[text](target)`` links and verifies every
+relative target resolves to a file or directory in the repo (anchors and
+``scheme://`` URLs are skipped; ``path#anchor`` checks only the path).
+Exit code 1 on any broken link — this is the CI docs gate.
+
+Usage: ``python tools/check_links.py [file-or-dir ...]``
+(defaults to README.md and docs/ at the repo root).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_markdown(paths: list[Path]):
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        elif p.suffix == ".md":
+            yield p
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            if path_part.startswith("/"):  # GitHub renders these repo-root-relative
+                resolved = (REPO / path_part.lstrip("/")).resolve()
+            else:
+                resolved = (md.parent / path_part).resolve()
+            where = f"{md.relative_to(REPO)}:{lineno}"
+            if REPO != resolved and REPO not in resolved.parents:
+                # exists locally or not, it escapes the checkout -> 404s on remotes
+                errors.append(f"{where}: link escapes repo -> {target}")
+            elif not resolved.exists():
+                errors.append(f"{where}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a).resolve() for a in argv] if argv else [REPO / "README.md", REPO / "docs"]
+    files = [f for f in iter_markdown([r for r in roots if r.exists()])]
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): {'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
