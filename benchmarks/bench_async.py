@@ -23,6 +23,11 @@ time until the mean local loss first reaches the target, per app.
 
 ``python -m benchmarks.bench_async --smoke`` runs a small configuration
 and writes a ``BENCH_async.json`` artifact (the CI perf trajectory).
+The smoke run also gates the multi-app fairness acceptance criteria
+(``benchmarks/bench_fairness.py``): at M = 16 with one hot app, Jain's
+index over demand-normalized per-app uplink throughput must reach 0.8
+under the weighted-fair engine and improve on the legacy start-time
+pricing, with no app's time-to-target-loss regressing more than 5%.
 """
 from __future__ import annotations
 
@@ -197,10 +202,19 @@ def main() -> None:
     ms = (1, 4) if args.smoke else (1, 4, 16)
     rounds_n = 3 if args.smoke else 5
     results = [compare(m, rounds_n=rounds_n) for m in ms]
+    fairness = None
+    if args.smoke:
+        from benchmarks import bench_fairness
+
+        fairness = {
+            "matrix": [bench_fairness.fairness_compare(16)],
+            "time_to_loss_guard": bench_fairness.time_to_loss_guard(),
+        }
     payload = {
         "bench": "async_time_to_target_fixed_vs_adaptive_vs_utility",
         "smoke": bool(args.smoke),
         "results": _json_safe(results),
+        "fairness": _json_safe(fairness),
     }
     out_path = os.path.abspath(args.out)
     with open(out_path, "w") as f:
@@ -228,7 +242,20 @@ def main() -> None:
         f"adaptive+utility <= fixed at M>=4: {ok_fixed}; beats sync: {ok_sync}; "
         f"churn >= 10% in every variant: {ok_churn}"
     )
-    if not (ok_fixed and ok_sync and ok_churn):
+    fairness_fails = []
+    if fairness is not None:
+        from benchmarks import bench_fairness
+
+        r = fairness["matrix"][0]
+        g = fairness["time_to_loss_guard"]
+        print(
+            f"fairness M=16: jain {r['jain_legacy']:.3f} -> {r['jain_fair']:.3f}; "
+            f"time-to-loss worst {g['max_regression']:.2f}x, mean {g['mean_ratio']:.2f}x"
+        )
+        fairness_fails = bench_fairness.gate(fairness["matrix"], g)
+        for msg in fairness_fails:
+            print(f"GATE FAIL: {msg}")
+    if not (ok_fixed and ok_sync and ok_churn) or fairness_fails:
         raise SystemExit(1)
 
 

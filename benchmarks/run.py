@@ -24,6 +24,8 @@ REGISTRY: list[tuple[str, str, str]] = [
      "vectorized round engine vs per-worker loop; M-app event simulator vs centralized baseline"),
     ("async_vs_sync(FedBuff)", "benchmarks.bench_async",
      "sync vs fixed-K vs adaptive-K vs adaptive-K+utility time-to-target-loss under churn"),
+    ("fairness(TabIII)", "benchmarks.bench_fairness",
+     "multi-app uplink fairness: weighted-fair re-pricing vs legacy start-time pricing, Jain's index at M in {4,16,64}"),
     ("scalability(Fig5)", "benchmarks.bench_scalability",
      "overlay join/route cost vs network size"),
     ("hops(Fig6)", "benchmarks.bench_hops",

@@ -47,6 +47,13 @@ class AppHandle:
     round_num: int = 0
     traffic_bytes: float = 0.0
     version: int = 0  # bumped by ApplyBuffered (async model version)
+    # weighted-fair transport knobs (read by AsyncBufferScheduler):
+    # the app's share of a contended uplink is proportional to
+    # transfer_weight, and rate_cap_mbps bounds the app's AGGREGATE
+    # rate on any single uplink (concurrent same-uplink flows split
+    # both the share and the cap); both must be > 0
+    transfer_weight: float = 1.0
+    rate_cap_mbps: float | None = None
     buffer: list[BufferedDelta] = field(default_factory=list)
     # per-apply telemetry appended by ApplyBuffered: version, arrivals,
     # effective K, staleness histogram, selector utility scores
@@ -200,6 +207,7 @@ class TotoroSystem:
         min_k: int = 1,
         k: int | None = None,
         selector_scores: dict | None = None,
+        transport: dict | None = None,
     ) -> dict:
         """Drain the buffer into one staleness-weighted aggregate.
 
@@ -211,10 +219,12 @@ class TotoroSystem:
         fewer than ``min_k`` commits are buffered (buffer untouched).
 
         ``k`` (the scheduler's effective buffer threshold for this
-        apply) and ``selector_scores`` (per-client utilities) are
-        optional caller telemetry; every successful apply appends a
-        record — version, arrivals, K, staleness histogram, scores — to
-        the handle's ``round_records``.
+        apply), ``selector_scores`` (per-client utilities) and
+        ``transport`` (the scheduler's fairness snapshot: per-app uplink
+        bytes/throughput + Jain's index) are optional caller telemetry;
+        every successful apply appends a record — version, arrivals, K,
+        staleness histogram, scores, transport — to the handle's
+        ``round_records``.
         """
         from repro.kernels.ops import buffered_aggregate
         from repro.kernels.tree_aggregate import staleness_weights
@@ -260,6 +270,7 @@ class TotoroSystem:
                 "k": stats["k"],
                 "staleness_hist": hist,
                 "selector_scores": selector_scores,
+                "transport": transport,
             }
         )
         if h.on_aggregate:

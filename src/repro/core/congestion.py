@@ -54,6 +54,46 @@ class CongestionEnv:
         return float(np.clip(1.0 - lat / self.l_max_ms, 0.0, 1.0) * self.theta[path])
 
 
+def fair_share_rates(
+    capacity: float, weights, caps=None, *, eps: float = 1e-9
+) -> list[float]:
+    """Weighted max-min fair allocation of one uplink across its flows.
+
+    Each flow i asks for the weighted share ``capacity * w_i / sum(w)``;
+    a flow whose ``caps[i]`` (Mbps rate cap, ``None`` = uncapped) binds
+    is frozen at its cap and the freed capacity is re-divided among the
+    uncapped flows (progressive water-filling).  With no caps this is
+    plain weighted processor sharing; with one flow it returns
+    ``[capacity]`` — the uncontended solo rate, unchanged from the
+    legacy ``capacity / k`` pricing at k = 1.
+
+    Deterministic, pure host-side numpy-free arithmetic.
+    """
+    n = len(weights)
+    if n == 0:
+        return []
+    cap_of = [float("inf") if c is None else float(c) for c in (caps or [None] * n)]
+    rates = [0.0] * n
+    active = list(range(n))
+    avail = float(capacity)
+    while active and avail > eps:
+        wsum = sum(weights[i] for i in active)
+        if wsum <= eps:
+            break
+        share = {i: avail * weights[i] / wsum for i in active}
+        bound = [i for i in active if cap_of[i] <= share[i] + eps]
+        if not bound:
+            for i in active:
+                rates[i] = share[i]
+            return rates
+        for i in bound:
+            rates[i] = cap_of[i]
+            avail -= cap_of[i]
+            active.remove(i)
+        avail = max(0.0, avail)
+    return rates
+
+
 def make_env(num_paths: int, *, seed: int = 0, bw_range=(20.0, 100.0), theta_range=(0.9, 1.0)) -> CongestionEnv:
     rng = np.random.default_rng(seed)
     return CongestionEnv(

@@ -21,7 +21,32 @@ This module splits that into an event core plus two schedulers:
   arrivals.  A ``ChurnModel`` injects fail/rejoin events on the *same*
   clock, driving ``core/recovery.fail_and_recover`` mid-round so repair
   latency lands on the timeline.
-- ``AdaptiveKController`` (this PR) closes the loop on K: instead of a
+- **Weighted-fair transfer pricing** (this PR, the multi-app starvation
+  fix): the PR-1/PR-2 transfer model priced a flow once, at start time,
+  against whatever else happened to be in flight — so a flow that began
+  alone kept its solo ``capacity`` rate even after k contenders arrived,
+  and a flow that began against k contenders kept ``capacity/k`` after
+  they all drained.  Both directions are wrong, and at M >= 16 apps the
+  error compounds into uplink starvation (ROADMAP).  ``EventCore`` now
+  carries a fluid-flow engine: each hop of a transfer is an open *flow*
+  on its sender's uplink, the uplink is divided by weighted max-min fair
+  sharing (``core/congestion.fair_share_rates``), and whenever a flow
+  joins or completes every in-flight flow on that uplink is **re-priced
+  progress-preservingly** — bytes already delivered at the old rate stay
+  delivered, only the remaining bytes reschedule at the new rate (a
+  virtual-finish-time update; total delivered bytes are conserved
+  exactly across any number of re-prices).  ``AsyncBufferScheduler``
+  uses the fair engine by default (``fair=False`` keeps the exact PR-3
+  start-time pricing); an uncontended (single-flow) fair trace is
+  identical to the legacy trace because one flow's fair share is the
+  whole uplink.  Per-app ``transfer_weight`` / ``rate_cap_mbps`` knobs
+  bias or bound the share, and a ``RelayAdmission`` policy adds
+  staleness-aware admission at shared relays: a contended relay defers
+  forwarding commits whose staleness discount ``1/(1+s)^a`` has decayed
+  below a threshold, freeing uplink for fresh traffic (deferred commits
+  resume FIFO as the uplink frees, or unconditionally at
+  ``max_defer_ms``, so no commit is ever dropped).
+- ``AdaptiveKController`` (PR 3) closes the loop on K: instead of a
   fixed buffer size, each buffered apply re-sizes K from the observed
   commit inter-arrival rate (EMA of arrivals per simulated millisecond)
   and the staleness distribution (a target percentile), clamped to
@@ -50,7 +75,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from .congestion import CongestionEnv
+from .congestion import CongestionEnv, fair_share_rates
 
 
 @dataclass(frozen=True)
@@ -95,6 +120,65 @@ class ChurnRecord:
     recovery_ms: float = 0.0
 
 
+@dataclass(frozen=True)
+class RelayAdmission:
+    """Staleness-aware admission control at shared relay uplinks.
+
+    When a relay already serves ``min_contenders`` or more flows, a
+    commit whose staleness discount ``1/(1+s)^alpha`` (s in model
+    versions, measured *now* — staleness keeps growing while the commit
+    is in flight) has decayed below ``threshold`` is deferred at that
+    relay: fresh traffic keeps the uplink, and the stale commit resumes
+    FIFO when a flow on the uplink completes, or unconditionally after
+    ``max_defer_ms`` — deferral delays, it never drops.  Each deferral
+    is reported to the client selector (``on_defer``) so chronic
+    deferral feeds the deadline term of utility-based selection.
+    """
+
+    threshold: float = 0.5
+    alpha: float = 0.5
+    min_contenders: int = 1
+    max_defer_ms: float = 200.0
+
+
+@dataclass(frozen=True)
+class DeferRecord:
+    """One relay-admission deferral as it resolved (telemetry)."""
+
+    start_ms: float
+    end_ms: float
+    app_idx: int
+    worker: int
+    relay: int
+    forced: bool  # True = resumed by the max_defer_ms deadline
+
+    @property
+    def waited_ms(self) -> float:
+        return self.end_ms - self.start_ms
+
+
+class _Flow:
+    """One in-flight hop transfer on a sender's uplink (fluid model)."""
+
+    __slots__ = (
+        "fid", "sender", "total_mbit", "delivered_mbit", "weight",
+        "rate_cap", "on_done", "ev", "rate", "t_last", "group",
+    )
+
+    def __init__(self, fid, sender, mbit, weight, rate_cap, on_done, group):
+        self.fid = fid
+        self.sender = sender
+        self.total_mbit = float(mbit)
+        self.delivered_mbit = 0.0
+        self.weight = float(weight)
+        self.rate_cap = rate_cap
+        self.on_done = on_done
+        self.ev: int | None = None
+        self.rate = 0.0
+        self.t_last = 0.0
+        self.group = group  # flows sharing a group split ONE weight share
+
+
 def pipelined_time(level_ms, chunks: int = 8) -> float:
     """Store-and-forward pipelining of a phase sequence: the payload is
     cut into ``chunks`` pieces so level i+1 starts forwarding as soon as
@@ -123,6 +207,9 @@ class EventCore:
         nodes = system.overlay.nodes()
         self._node_idx = {n: i for i, n in enumerate(nodes)}
         cap = np.asarray([system.overlay.bandwidth[n] for n in nodes], np.float32)
+        self._cap_mbps = cap.astype(np.float64)
+        self.model_bytes = float(model_bytes)
+        self.base_ms = float(base_ms)
         self.env = CongestionEnv(
             capacity=jnp.asarray(cap),
             theta=jnp.ones(len(nodes), jnp.float32),
@@ -134,6 +221,10 @@ class EventCore:
         self._seq = 0
         self._active: dict[int, np.ndarray] = {}  # event seq -> sender idx array
         self._callbacks: dict[int, Callable | None] = {}
+        # fluid fair-share flows (weighted processor sharing per uplink)
+        self._flows: dict[int, _Flow] = {}
+        self._flows_by_sender: dict[int, list[int]] = {}
+        self._flow_seq = 0
 
     def _reset_clock(self) -> None:
         self.now = 0.0
@@ -141,6 +232,9 @@ class EventCore:
         self._seq = 0
         self._active.clear()
         self._callbacks.clear()
+        self._flows.clear()
+        self._flows_by_sender.clear()
+        self._flow_seq = 0
 
     def sender_indices(self, nodes) -> np.ndarray:
         return np.asarray([self._node_idx[n] for n in nodes], np.int32)
@@ -172,9 +266,113 @@ class EventCore:
         return seq
 
     def cancel(self, seq: int) -> None:
-        """Void a pending event (its flows stop contending immediately)."""
-        self._callbacks[seq] = None
+        """Void a pending event (its flows stop contending immediately).
+        Safe on an already-fired seq (the fair path re-cancels the last
+        leg event of a cycle wholesale on churn)."""
+        if seq in self._callbacks:
+            self._callbacks[seq] = None
         self._active.pop(seq, None)
+
+    # -- fluid fair-share flows (weighted-fair transfer pricing) ---------------
+
+    def open_flow(
+        self,
+        sender: int,
+        mbit: float,
+        *,
+        weight: float = 1.0,
+        rate_cap: float | None = None,
+        on_done: Callable[[float], None],
+        group=None,
+    ) -> int:
+        """Start one hop transfer of ``mbit`` megabits on ``sender``'s
+        uplink.  The uplink is shared by weighted max-min fair sharing;
+        opening (and closing) a flow re-prices every in-flight flow on
+        that uplink progress-preservingly.  Flows with the same non-None
+        ``group`` (the async scheduler passes the app index) split one
+        ``weight`` share — and one ``rate_cap`` — between them, so an
+        app's aggregate share of a relay is set by its weight, not by
+        how many of its workers happen to route through it.
+        ``on_done(t)`` fires when the last byte lands."""
+        fid = self._flow_seq
+        self._flow_seq += 1
+        key = ("solo", fid) if group is None else ("grp", group)
+        f = _Flow(fid, int(sender), mbit, weight, rate_cap, on_done, key)
+        f.t_last = self.now
+        self._flows[fid] = f
+        self._flows_by_sender.setdefault(f.sender, []).append(fid)
+        self._reprice_uplink(f.sender)
+        return fid
+
+    def cancel_flow(self, fid: int) -> None:
+        """Abort an in-flight flow (sender failed / cycle cancelled); the
+        survivors on that uplink immediately speed up."""
+        f = self._flows.pop(fid, None)
+        if f is None:
+            return
+        if f.ev is not None:
+            self.cancel(f.ev)
+        self._drop_from_sender(f)
+        self._reprice_uplink(f.sender)
+        self._on_uplink_freed(f.sender, self.now)
+
+    def flow_contenders(self, sender: int) -> int:
+        """Number of flows currently sharing ``sender``'s uplink."""
+        return len(self._flows_by_sender.get(int(sender), ()))
+
+    def _drop_from_sender(self, f: _Flow) -> None:
+        fids = self._flows_by_sender.get(f.sender)
+        if fids is not None:
+            fids.remove(f.fid)
+            if not fids:
+                del self._flows_by_sender[f.sender]
+
+    def _reprice_uplink(self, sender: int) -> None:
+        """Progress-preserving re-price of every flow on one uplink:
+        credit bytes delivered at the old rates since the last update,
+        recompute the weighted-fair rates, reschedule each completion at
+        ``remaining / new_rate`` (a virtual-finish-time update)."""
+        fids = self._flows_by_sender.get(sender)
+        if not fids:
+            return
+        flows = [self._flows[fid] for fid in fids]
+        for f in flows:
+            f.delivered_mbit = min(
+                f.total_mbit, f.delivered_mbit + f.rate * (self.now - f.t_last) * 1e-3
+            )
+            f.t_last = self.now
+        # per-group (= per-app) fairness: flows in one group split a
+        # single weight share and rate cap equally, so an app's slice of
+        # a relay is its weight, not its concurrent-flow count
+        group_n: dict = {}
+        for f in flows:
+            group_n[f.group] = group_n.get(f.group, 0) + 1
+        rates = fair_share_rates(
+            float(self._cap_mbps[sender]),
+            [f.weight / group_n[f.group] for f in flows],
+            [None if f.rate_cap is None else f.rate_cap / group_n[f.group] for f in flows],
+        )
+        for f, r in zip(flows, rates):
+            f.rate = r
+            if f.ev is not None:
+                self.cancel(f.ev)
+            remaining = f.total_mbit - f.delivered_mbit
+            f.ev = self.schedule(
+                1e3 * remaining / max(r, 1e-9),
+                lambda t, fid=f.fid: self._finish_flow(fid, t),
+            )
+
+    def _finish_flow(self, fid: int, t: float) -> None:
+        f = self._flows.pop(fid)
+        f.delivered_mbit = f.total_mbit  # exact byte conservation
+        self._drop_from_sender(f)
+        self._reprice_uplink(f.sender)
+        f.on_done(t)
+        self._on_uplink_freed(f.sender, t)
+
+    def _on_uplink_freed(self, sender: int, t: float) -> None:
+        """Hook: a flow left ``sender``'s uplink.  The async scheduler
+        overrides this to resume relay-deferred commits."""
 
     def run_events(self, *, max_events: int = 1_000_000, stop: Callable[[], bool] | None = None) -> None:
         """Drain the heap in clock order, dispatching callbacks."""
@@ -361,6 +559,17 @@ class AdaptiveKController:
       ``rate * max_apply_interval_ms`` so the expected buffer fill time
       ``K / rate`` never exceeds the interval — under churn the rate
       drops and the cap pulls K down before the buffer can stall.
+      Outage handling: the *first* commit gap longer than
+      ``rate_gap_ms`` (default ``max_apply_interval_ms``) is treated as
+      an outage — every worker failed, then rejoined — and resets the
+      inter-arrival tracking instead of folding a near-zero
+      instantaneous rate into the EMA (with a large ``arrival_beta``
+      that poisoned rate cap would clamp K at ``k_min`` essentially
+      forever), so the EMA keeps its pre-outage value and K recovers as
+      soon as post-rejoin commits flow.  A *second* consecutive long
+      gap is not an outage but a persistently slow arrival regime: it
+      folds normally, so the interval cap still pulls K down when the
+      system genuinely slows (the PR-3 behavior the cap exists for).
 
     The result is clamped to ``[k_min, min(k_max, live_workers)]``;
     live membership comes from the scheduler each apply, so failed
@@ -380,6 +589,7 @@ class AdaptiveKController:
         gain: float = 0.5,
         arrival_beta: float = 0.2,
         max_apply_interval_ms: float | None = None,
+        rate_gap_ms: float | None = None,
     ):
         self.k_min = max(1, int(k_min))
         self.k_max = None if k_max is None else int(k_max)
@@ -389,9 +599,11 @@ class AdaptiveKController:
         self.gain = float(gain)
         self.arrival_beta = float(arrival_beta)
         self.max_apply_interval_ms = max_apply_interval_ms
+        self.rate_gap_ms = rate_gap_ms if rate_gap_ms is not None else max_apply_interval_ms
         self.arrivals_per_ms = 0.0
         self._last_commit_ms: float | None = None
         self._tied_arrivals = 0
+        self._gap_skipped = False
         self.history: list[tuple[float, int, float, float]] = []
 
     @property
@@ -410,6 +622,18 @@ class AdaptiveKController:
         if dt <= 1e-9:
             self._tied_arrivals += 1
             return
+        if self.rate_gap_ms is not None and dt > self.rate_gap_ms and not self._gap_skipped:
+            # full-window outage (all workers down, now rejoined): restart
+            # the inter-arrival tracking rather than folding a near-zero
+            # instantaneous rate into the EMA — the pre-outage rate stands
+            # until real post-rejoin arrivals update it, so K recovers.
+            # Only one consecutive gap is forgiven: a second long gap is a
+            # persistently slow regime and folds below, keeping the cap live
+            self._gap_skipped = True
+            self._last_commit_ms = t_ms
+            self._tied_arrivals = 1
+            return
+        self._gap_skipped = False
         inst = self._tied_arrivals / dt
         if self.arrivals_per_ms == 0.0:
             self.arrivals_per_ms = inst
@@ -465,6 +689,20 @@ class AsyncBufferScheduler(EventCore):
     repaired through ``core/recovery.fail_and_recover`` on the same
     clock, and re-grafted orphans stall for the repair latency.
 
+    Transfer pricing (this PR): ``fair=True`` (the default) runs every
+    hop of every download/upload as a fluid flow on its sender's uplink
+    through the ``EventCore`` fair-share engine — weighted max-min
+    sharing, re-priced progress-preservingly whenever a flow joins or
+    completes, so no app keeps a stale solo (or stale congested) rate.
+    Per-app ``app_weights`` / ``app_rate_caps`` (falling back to the
+    handles' ``transfer_weight`` / ``rate_cap_mbps``) bias or bound each
+    app's share, and ``relay_admission`` (a ``RelayAdmission``) defers
+    stale commits at contended relays.  ``fair=False`` restores the
+    PR-3 start-time-only pricing bit for bit; a single-flow (never
+    contended) trace is identical in both modes.  Per-app uplink bytes
+    are accounted per delivered commit leg; ``transport_stats()`` and the
+    per-apply ``fairness_log`` expose throughput and Jain's index.
+
     Two control knobs are pluggable (both default OFF, preserving the
     PR-2 trace exactly):
 
@@ -494,6 +732,10 @@ class AsyncBufferScheduler(EventCore):
         adaptive: bool = False,
         adaptive_kwargs: dict | None = None,
         selector=None,
+        fair: bool = True,
+        app_weights: float | list[float] | None = None,
+        app_rate_caps: float | list[float] | None = None,
+        relay_admission: RelayAdmission | None = None,
     ):
         super().__init__(system, handles, model_bytes=model_bytes, base_ms=base_ms)
         self.compute_ms = compute_ms
@@ -508,9 +750,24 @@ class AsyncBufferScheduler(EventCore):
         self.adaptive = bool(adaptive)
         self.adaptive_kwargs = dict(adaptive_kwargs or {})
         self.selector = selector
+        self.fair = bool(fair)
+        self.relay_admission = relay_admission
+        self._weight = self._per_app(app_weights, "transfer_weight", 1.0)
+        self._cap = self._per_app(app_rate_caps, "rate_cap_mbps", None)
+        if any(w <= 0 for w in self._weight) or any(
+            c is not None and c <= 0 for c in self._cap
+        ):
+            raise ValueError(
+                "app transfer weights must be > 0 and rate caps > 0 Mbps "
+                f"(got weights={self._weight}, caps={self._cap}): a zero "
+                "share would price the app's transfers at rate 0 and its "
+                "cycles would never complete"
+            )
         self.controllers: list[AdaptiveKController | None] = []
         self.history: list[ApplyEvent] = []
         self.churn_log: list[ChurnRecord] = []
+        self.defer_log: list[DeferRecord] = []
+        self.fairness_log: list[dict] = []
         # per-app run state (filled by run())
         self._version: list[int] = []
         self._buffer: list[list[tuple[int, int]]] = []  # (worker, version)
@@ -518,12 +775,31 @@ class AsyncBufferScheduler(EventCore):
         self._cycle: dict[tuple[int, int], int] = {}
         self._version_at_start: dict[tuple[int, int], int] = {}
         self._pending_ev: dict[tuple[int, int], int] = {}
+        self._pending_flow: dict[tuple[int, int], int] = {}
         self._delay_until: dict[tuple[int, int], float] = {}
         self._cycle_start: dict[tuple[int, int], float] = {}
         self._parked: list[set[int]] = []
         self._failed: set[int] = set()
         self._orig_workers: list[set[int]] = []
         self._applies_target = 1
+        # weighted-fair transport state
+        self._uplink_bytes: list[float] = []
+        self._done_ms: list[float] = []
+        self._defer_count: list[int] = []
+        self._deferred: dict[int, list[dict]] = {}  # relay -> FIFO of records
+        self._deferred_by_key: dict[tuple[int, int], dict] = {}
+
+    def _per_app(self, value, handle_attr: str, default):
+        """Resolve a per-app knob: explicit arg (scalar broadcast or
+        list) beats the handle attribute beats the default."""
+        n = len(self.handles)
+        if value is None:
+            return [getattr(h, handle_attr, default) for h in self.handles]
+        if isinstance(value, (int, float)):
+            return [value] * n
+        vals = list(value)
+        assert len(vals) == n
+        return vals
 
     # -- worker membership ----------------------------------------------------
 
@@ -569,7 +845,18 @@ class AsyncBufferScheduler(EventCore):
             self._start_cycle(ai, w)
             return
         active = sum(1 for (a, _) in self._pending_ev if a == ai)
-        if active < self._effective_k(ai) or self.selector.admit(ai, w, self.now):
+        if active < self._effective_k(ai):
+            # liveness guard: fewer than K cycles in flight — this worker
+            # is needed regardless of utility.  Drain its blocklist too
+            # (satellite fix): when adaptive K exceeds the live
+            # non-blocklisted pool, forced admissions must spend the
+            # block, or the blocklist pins workers the buffer depends on.
+            drain = getattr(self.selector, "on_force_admit", None)
+            if drain is not None:
+                drain(ai, w)
+            self._parked[ai].discard(w)
+            self._start_cycle(ai, w)
+        elif self.selector.admit(ai, w, self.now):
             self._parked[ai].discard(w)
             self._start_cycle(ai, w)
         else:
@@ -585,6 +872,12 @@ class AsyncBufferScheduler(EventCore):
         if self.trainer is not None:
             self.trainer.begin_download(ai, w)
         senders = self._path_senders(ai, w, up=False)
+        if self.fair:
+            self._begin_leg(
+                ai, w, senders, delay, commit=False,
+                done=lambda t, ai=ai, w=w: self._on_downloaded(ai, w, t),
+            )
+            return
         dur = delay + self.transfer_ms(senders, reduce="sum")
         self._pending_ev[key] = self.schedule(
             dur, lambda t, ai=ai, w=w: self._on_downloaded(ai, w, t), senders
@@ -606,15 +899,149 @@ class AsyncBufferScheduler(EventCore):
         if self._done[ai] or w in self._failed:
             return
         senders = self._path_senders(ai, w, up=True)
+        if self.fair:
+            self._begin_leg(
+                ai, w, senders, 0.0, commit=True,
+                done=lambda t, ai=ai, w=w: self._on_uploaded(ai, w, t),
+            )
+            return
         dur = self.transfer_ms(senders, reduce="sum")
         self._pending_ev[(ai, w)] = self.schedule(
             dur, lambda t, ai=ai, w=w: self._on_uploaded(ai, w, t), senders
         )
 
+    # -- fair-share leg execution (hop-by-hop fluid flows) ---------------------
+
+    def _begin_leg(self, ai: int, w: int, senders, delay: float, *, commit: bool, done) -> None:
+        """Run one transfer leg (download or upload) as sequential per-hop
+        flows on the fair-share engine.  The leg's store-and-forward total
+        for an uncontended path equals the legacy ``reduce="sum"`` price
+        exactly: sum over hops of ``base_ms + mbit / capacity``.  Commit
+        legs pass relay admission at every intermediate hop.  ``(ai, w)``
+        stays in
+        ``_pending_ev`` for the whole leg (cycle liveness/barrier checks
+        key off membership, not the stored seq)."""
+        key = (ai, w)
+        hops = [int(s) for s in senders]
+        if not hops:
+            self._pending_ev[key] = self.schedule(delay, lambda t: done(t))
+            return
+
+        def start_hop(j: int, extra: float) -> None:
+            if self._done[ai] or w in self._failed:
+                return
+            relay = hops[j]
+            if commit and j > 0 and self._admission_defers(ai, w, relay):
+                # resume bypasses the admission re-check: a deadline-forced
+                # resume must forward unconditionally (no re-deferral, so
+                # max_defer_ms is a hard bound, not a livelock)
+                self._defer_hop(ai, w, relay, lambda j=j, extra=extra: launch_hop(j, extra))
+                return
+            launch_hop(j, extra)
+
+        def launch_hop(j: int, extra: float) -> None:
+            if self._done[ai] or w in self._failed:
+                return
+            self._pending_ev[key] = self.schedule(
+                self.base_ms + extra,
+                lambda t, j=j, relay=hops[j]: open_hop(j, relay),
+            )
+
+        def open_hop(j: int, relay: int) -> None:
+            if self._done[ai] or w in self._failed:
+                return
+            self._pending_flow[key] = self.open_flow(
+                relay, self.env.packet_mbit,
+                weight=self._weight[ai], rate_cap=self._cap[ai],
+                on_done=lambda t, j=j: hop_done(j, t), group=ai,
+            )
+
+        def hop_done(j: int, t: float) -> None:
+            self._pending_flow.pop(key, None)
+            if j + 1 < len(hops):
+                start_hop(j + 1, 0.0)
+            else:
+                done(t)
+
+        start_hop(0, delay)
+
+    def _admission_defers(self, ai: int, w: int, relay: int) -> bool:
+        adm = self.relay_admission
+        if adm is None or self.flow_contenders(relay) < adm.min_contenders:
+            return False
+        staleness = self._version[ai] - self._version_at_start[(ai, w)]
+        return (1.0 + staleness) ** (-adm.alpha) < adm.threshold
+
+    def _defer_hop(self, ai: int, w: int, relay: int, resume: Callable[[], None]) -> None:
+        """Park a stale commit's hop at a contended relay.  It resumes
+        FIFO when a flow on the relay's uplink completes (and admission
+        passes again), or unconditionally at ``max_defer_ms``."""
+        key = (ai, w)
+        t0 = self.now
+
+        def fire(t: float, forced: bool) -> None:
+            rec = self._deferred_by_key.pop(key, None)
+            if rec is None:
+                return  # already resumed or cancelled by churn
+            queue = self._deferred.get(relay)
+            if queue is not None:
+                queue.remove(rec)
+                if not queue:
+                    del self._deferred[relay]
+            if not forced:
+                self.cancel(rec["deadline_ev"])
+            self.defer_log.append(DeferRecord(t0, t, ai, w, relay, forced))
+            self._defer_count[ai] += 1
+            if self.selector is not None:
+                on_defer = getattr(self.selector, "on_defer", None)
+                if on_defer is not None:
+                    on_defer(ai, w, t, t - t0)
+            resume()
+
+        rec = {"key": key, "relay": relay, "fire": fire}
+        rec["deadline_ev"] = self.schedule(
+            self.relay_admission.max_defer_ms, lambda t: fire(t, True)
+        )
+        # the deadline event keeps (ai, w) cancellable through churn
+        self._pending_ev[key] = rec["deadline_ev"]
+        self._deferred.setdefault(relay, []).append(rec)
+        self._deferred_by_key[key] = rec
+
+    def _on_uplink_freed(self, sender: int, t: float) -> None:
+        """A flow left ``sender``'s uplink: re-offer the oldest deferred
+        commit parked there (one per freed flow — FIFO, no stampede)."""
+        queue = self._deferred.get(sender)
+        if not queue:
+            return
+        for rec in list(queue):
+            ai, w = rec["key"]
+            if not self._admission_defers(ai, w, sender):
+                rec["fire"](t, False)
+                return
+
+    def _drop_deferred(self, key: tuple[int, int]) -> None:
+        rec = self._deferred_by_key.pop(key, None)
+        if rec is None:
+            return
+        self.cancel(rec["deadline_ev"])
+        queue = self._deferred.get(rec["relay"])
+        if queue is not None:
+            queue.remove(rec)
+            if not queue:
+                del self._deferred[rec["relay"]]
+
     def _on_uploaded(self, ai: int, w: int, t: float) -> None:
         if self._done[ai] or w in self._failed:
             return
         key = (ai, w)
+        # uplink bytes are credited at commit (leg) granularity in BOTH
+        # pricing modes, so fairness comparisons across modes never
+        # measure accounting granularity at a horizon cut; flow-level
+        # byte conservation across re-prices is asserted separately
+        # (tests/test_fairness.py on _Flow.delivered_mbit)
+        self._uplink_bytes[ai] += self.model_bytes * len(
+            self._path_senders(ai, w, up=True)
+        )
         self._pending_ev.pop(key, None)
         self._cycle[key] = self._cycle.get(key, 0) + 1
         self._buffer[ai].append((w, self._version_at_start.pop(key)))
@@ -644,9 +1071,11 @@ class AsyncBufferScheduler(EventCore):
         k_used = self._effective_k(ai)
         cur = self._version[ai]
         stal = [cur - v for _, v in arrivals]
+        transport = self._transport_record(ai, t)
+        self.fairness_log.append(transport)
         if self.trainer is not None:
             scores = self.selector.scores(ai) if self.selector is not None else None
-            self.trainer.apply(ai, t, k=k_used, selector_scores=scores)
+            self.trainer.apply(ai, t, k=k_used, selector_scores=scores, transport=transport)
         self._version[ai] = cur + 1
         if self.controllers and self.controllers[ai] is not None:
             self.controllers[ai].on_apply(t, stal, len(self._live_workers(ai)))
@@ -663,11 +1092,53 @@ class AsyncBufferScheduler(EventCore):
         )
         if self._version[ai] >= self._applies_target:
             self._done[ai] = True
+            self._done_ms[ai] = t
         elif self.selector is not None and self._parked[ai]:
             # re-offer parked workers against the post-apply utilities
             parked, self._parked[ai] = sorted(self._parked[ai]), set()
             for w in parked:
                 self._offer_cycle(ai, w)
+
+    # -- fairness telemetry ----------------------------------------------------
+
+    def _uplink_throughputs(self) -> list[float]:
+        """Per-app uplink throughput (Mbps) over each app's active
+        window [0, done-or-now]."""
+        out = []
+        for ai in range(len(self.handles)):
+            t_end = self._done_ms[ai] if self._done[ai] else self.now
+            out.append(self._uplink_bytes[ai] * 8e-6 / max(t_end * 1e-3, 1e-9))
+        return out
+
+    def _transport_record(self, ai: int, t: float) -> dict:
+        from repro.kernels.ops import jain_fairness
+
+        tp = self._uplink_throughputs()
+        return {
+            "t_ms": t,
+            "app_id": self.handles[ai].tree.app_id,
+            "uplink_bytes": self._uplink_bytes[ai],
+            "uplink_mbps": tp[ai],
+            "jain_uplink": jain_fairness(tp),
+            "deferred_commits": self._defer_count[ai],
+        }
+
+    def transport_stats(self) -> dict:
+        """End-of-run fairness summary: per-app uplink bytes/throughput,
+        per-app completion time, Jain's index over the throughputs."""
+        from repro.kernels.ops import jain_fairness
+
+        tp = self._uplink_throughputs()
+        return {
+            "uplink_bytes": list(self._uplink_bytes),
+            "uplink_mbps": tp,
+            "done_ms": [
+                self._done_ms[ai] if self._done[ai] else self.now
+                for ai in range(len(self.handles))
+            ],
+            "jain_uplink": jain_fairness(tp),
+            "deferred_commits": len(self.defer_log),
+        }
 
     # -- churn -----------------------------------------------------------------
 
@@ -717,6 +1188,10 @@ class AsyncBufferScheduler(EventCore):
                     ev = self._pending_ev.pop(key, None)
                     if ev is not None:
                         self.cancel(ev)
+                    fid = self._pending_flow.pop(key, None)
+                    if fid is not None:
+                        self.cancel_flow(fid)
+                    self._drop_deferred(key)
                     self._version_at_start.pop(key, None)
                     self._cycle_start.pop(key, None)
                     self._parked[ai].discard(n)
@@ -725,17 +1200,13 @@ class AsyncBufferScheduler(EventCore):
             self.churn_log.append(
                 ChurnRecord(t, "fail", tuple(victims), recovery_ms=recovery_ms)
             )
-            # failing in-flight workers may have drained an app below K
-            # active cycles while live workers sit parked — re-offer them
-            # now (the liveness guard force-admits), or nothing would
-            # ever commit again and parked workers would wait forever
-            if self.selector is not None:
-                for ai in range(len(self.handles)):
-                    if self._done[ai] or not self._parked[ai]:
-                        continue
-                    parked, self._parked[ai] = sorted(self._parked[ai]), set()
-                    for w in parked:
-                        self._offer_cycle(ai, w)
+            # a fail can strand an app in three ways, all fixed by _kick:
+            # the live pool shrank so the buffer already meets the clamped
+            # K but no commit event will re-check it; live workers sit
+            # parked while fewer than K cycles are in flight; or barrier
+            # idlers lost the commit that would have released them
+            for ai in range(len(self.handles)):
+                self._kick(ai, t)
             self.schedule(
                 self.churn.downtime_ms,
                 lambda tt, victims=victims, info=rejoin_info: self._on_churn_rejoin(
@@ -743,6 +1214,35 @@ class AsyncBufferScheduler(EventCore):
                 ),
             )
         self._schedule_churn()
+
+    def _kick(self, ai: int, t: float) -> None:
+        """Liveness after a membership change: apply if the buffer already
+        meets the (possibly shrunk) effective K — commits only re-check
+        fullness as they land, so a fail that clamps K below the current
+        fill would otherwise stall the app forever (regression:
+        tests/test_fairness.py) — then re-offer parked workers (the
+        force-admit guard drains blocklists).  Barrier idlers are
+        restarted ONLY when the apply fired here: the normal release in
+        ``_on_uploaded`` never runs for a churn-triggered apply, but an
+        unconditional re-offer would hand committed idlers a second
+        cycle inside the same barrier round (duplicate commits) whenever
+        any unrelated node failed."""
+        if self._done[ai]:
+            return
+        applied = False
+        if self._buffer[ai] and len(self._buffer[ai]) >= self._effective_k(ai):
+            self._apply(ai, t)
+            applied = True
+            if self._done[ai]:
+                return
+        if self.selector is not None and self._parked[ai]:
+            parked, self._parked[ai] = sorted(self._parked[ai]), set()
+            for w in parked:
+                self._offer_cycle(ai, w)
+        if self.barrier and applied:
+            for lw in self._live_workers(ai):
+                if (ai, lw) not in self._pending_ev and lw not in self._parked[ai]:
+                    self._offer_cycle(ai, lw)
 
     def _on_churn_rejoin(self, t: float, victims: list[int], info: dict) -> None:
         overlay = self.system.overlay
@@ -766,9 +1266,18 @@ class AsyncBufferScheduler(EventCore):
 
     # -- driver ----------------------------------------------------------------
 
-    def run(self, applies: int = 1, *, max_events: int = 1_000_000) -> list[ApplyEvent]:
+    def run(
+        self,
+        applies: int = 1,
+        *,
+        max_events: int = 1_000_000,
+        horizon_ms: float | None = None,
+    ) -> list[ApplyEvent]:
         """Run every app until it has performed ``applies`` buffered
-        updates; returns the ``ApplyEvent`` history in clock order."""
+        updates; returns the ``ApplyEvent`` history in clock order.
+        ``horizon_ms`` additionally stops the clock at a fixed simulated
+        time — the fairness bench uses it to compare per-app uplink
+        delivery over one common contended window."""
         self._reset_clock()
         self._applies_target = applies
         n = len(self.handles)
@@ -778,12 +1287,20 @@ class AsyncBufferScheduler(EventCore):
         self._cycle.clear()
         self._version_at_start.clear()
         self._pending_ev.clear()
+        self._pending_flow.clear()
         self._delay_until.clear()
         self._cycle_start.clear()
         self._parked = [set() for _ in range(n)]
         self._failed.clear()
+        self._uplink_bytes = [0.0] * n
+        self._done_ms = [0.0] * n
+        self._defer_count = [0] * n
+        self._deferred = {}
+        self._deferred_by_key = {}
         self.history = []
         self.churn_log = []
+        self.defer_log = []
+        self.fairness_log = []
         self.controllers = [
             AdaptiveKController(**{"k_init": self.buffer_k[ai], **self.adaptive_kwargs})
             if self.adaptive
@@ -797,7 +1314,11 @@ class AsyncBufferScheduler(EventCore):
             for w in self._workers(ai):
                 self._offer_cycle(ai, w)
         self._schedule_churn()
-        self.run_events(max_events=max_events, stop=lambda: all(self._done))
+        if horizon_ms is None:
+            stop = lambda: all(self._done)
+        else:
+            stop = lambda: all(self._done) or self.now >= horizon_ms
+        self.run_events(max_events=max_events, stop=stop)
         return list(self.history)
 
 

@@ -77,9 +77,29 @@ def learnable_lm_batch(sc: StreamConfig, shard: int, step: int, noise: float = 0
 
 
 def dirichlet_partition(
-    labels: np.ndarray, num_clients: int, alpha: float, seed: int = 0
+    labels: np.ndarray,
+    num_clients: int,
+    alpha: float,
+    seed: int = 0,
+    min_samples: int = 1,
 ) -> list[np.ndarray]:
-    """Partition sample indices across clients with Dirichlet(alpha) class skew."""
+    """Partition sample indices across clients with Dirichlet(alpha) class skew.
+
+    At low ``alpha`` the draw concentrates whole classes on few clients
+    and can leave clients with *zero* samples — downstream, an all-empty
+    shard turns the engine's masked padding into dead weight-0 workers
+    (and callers used to paper over it with bogus fallback indices).
+    ``min_samples`` (default 1) guarantees every client at least that
+    many samples by deterministically reassigning from the currently
+    largest clients (stable index tie-break), preserving the skew
+    everywhere else.  ``min_samples=0`` reproduces the raw draw.
+    Requires ``len(labels) >= num_clients * min_samples``.
+    """
+    if min_samples > 0 and len(labels) < num_clients * min_samples:
+        raise ValueError(
+            f"cannot give {num_clients} clients >= {min_samples} samples "
+            f"from {len(labels)} total"
+        )
     rng = np.random.default_rng(seed)
     classes = np.unique(labels)
     idx_by_client: list[list[int]] = [[] for _ in range(num_clients)]
@@ -90,6 +110,12 @@ def dirichlet_partition(
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for client, part in enumerate(np.split(idx, cuts)):
             idx_by_client[client].extend(part.tolist())
+    for client in range(num_clients):
+        while len(idx_by_client[client]) < min_samples:
+            donor = max(
+                range(num_clients), key=lambda i: (len(idx_by_client[i]), -i)
+            )
+            idx_by_client[client].append(idx_by_client[donor].pop())
     return [np.asarray(sorted(v), dtype=np.int64) for v in idx_by_client]
 
 

@@ -92,14 +92,19 @@ class AsyncTrainer:
         if v is not None:
             self._refs[ai][v] -= 1
 
-    def apply(self, ai: int, t: float, *, k: int | None = None, selector_scores=None) -> dict | None:
+    def apply(
+        self, ai: int, t: float, *, k: int | None = None, selector_scores=None,
+        transport: dict | None = None,
+    ) -> dict | None:
         """Buffer is full: train each version group, commit the deltas,
         apply the staleness-weighted update, bump the global version.
 
-        ``k`` (the effective buffer threshold that triggered this apply)
-        and ``selector_scores`` (the selector's per-client utilities at
-        apply time) are telemetry from the scheduler; they ride into the
-        app handle's ``round_records`` via ``ApplyBuffered``.
+        ``k`` (the effective buffer threshold that triggered this apply),
+        ``selector_scores`` (the selector's per-client utilities at
+        apply time) and ``transport`` (the scheduler's fairness snapshot:
+        per-app uplink bytes/throughput and Jain's index) are telemetry
+        from the scheduler; they ride into the app handle's
+        ``round_records`` via ``ApplyBuffered``.
         """
         app = self.apps[ai]
         pending, self._pending[ai] = self._pending[ai], []
@@ -138,7 +143,7 @@ class AsyncTrainer:
             self._refs[ai][v] -= len(ws)
         stats = self.system.ApplyBuffered(
             app.handle.app_id, staleness_alpha=self.staleness_alpha,
-            k=k, selector_scores=selector_scores,
+            k=k, selector_scores=selector_scores, transport=transport,
         )
         agg = stats["result"]
         app.params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype), app.params, agg)
@@ -187,6 +192,10 @@ def run_async(
     adaptive: bool = False,
     adaptive_kwargs: dict | None = None,
     selector=None,
+    fair: bool = True,
+    app_weights=None,
+    app_rate_caps=None,
+    relay_admission=None,
 ) -> dict:
     """Wire an ``AsyncTrainer`` under an ``AsyncBufferScheduler`` and run
     every app to ``applies`` buffered updates.  Returns the scheduler
@@ -195,7 +204,12 @@ def run_async(
     ``adaptive=True`` turns on per-app ``AdaptiveKController``s
     (``buffer_k`` seeds K); ``selector`` plugs a
     ``fl/selection.ClientSelector`` into both the scheduler (admission,
-    cycle-time feedback) and the trainer (loss/delta-norm feedback)."""
+    cycle-time feedback) and the trainer (loss/delta-norm feedback).
+    ``fair`` selects the weighted-fair transfer pricing (default; set
+    False for the legacy start-time-only pricing), ``app_weights`` /
+    ``app_rate_caps`` bias or bound per-app uplink shares, and
+    ``relay_admission`` (a ``core.sim.RelayAdmission``) defers stale
+    commits at contended relays."""
     from repro.core.sim import AsyncBufferScheduler
 
     trainer = AsyncTrainer(system, apps, staleness_alpha=staleness_alpha, selector=selector)
@@ -212,6 +226,10 @@ def run_async(
         adaptive=adaptive,
         adaptive_kwargs=adaptive_kwargs,
         selector=selector,
+        fair=fair,
+        app_weights=app_weights,
+        app_rate_caps=app_rate_caps,
+        relay_admission=relay_admission,
     )
     events = sched.run(applies)
     return {

@@ -93,6 +93,10 @@ def run_async(
     adaptive: bool = False,
     adaptive_kwargs: dict | None = None,
     selector=None,
+    fair: bool = True,
+    app_weights=None,
+    app_rate_caps=None,
+    relay_admission=None,
 ) -> dict:
     """FedBuff-style buffered-async rounds on the event clock.
 
@@ -103,7 +107,10 @@ def run_async(
     (``core.sim.ChurnModel``) fails/rejoins workers mid-round.
     ``adaptive=True`` re-sizes K per apply (``core.sim
     .AdaptiveKController``); ``selector`` plugs in utility-based client
-    admission (``fl/selection``).
+    admission (``fl/selection``).  Transfers are priced by the
+    weighted-fair flow engine (``fair=False`` restores the legacy
+    start-time pricing); ``app_weights`` / ``app_rate_caps`` /
+    ``relay_admission`` expose the per-app fairness knobs.
     """
     from repro.fl import async_engine
 
@@ -112,6 +119,8 @@ def run_async(
         staleness_alpha=staleness_alpha, model_bytes=model_bytes,
         compute_ms=compute_ms, churn=churn, barrier=barrier,
         adaptive=adaptive, adaptive_kwargs=adaptive_kwargs, selector=selector,
+        fair=fair, app_weights=app_weights, app_rate_caps=app_rate_caps,
+        relay_admission=relay_admission,
     )
 
 

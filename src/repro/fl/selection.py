@@ -55,7 +55,17 @@ class ClientSelector(Protocol):
     raw signal (observed cycle wall-clock, ms).  ``on_train`` reports
     the statistical term's signal when a data plane exists (the trainer
     calls it at apply time with the client's fresh local loss and delta
-    norm).  ``scores`` exposes the current utilities for telemetry.
+    norm).  ``on_defer`` reports that one of the worker's commits was
+    held back at a contended relay (``core/sim.RelayAdmission``); the
+    hold time is already inside the cycle wall-clock ``on_commit``
+    reports (the deadline term sees it automatically), so ``on_defer``
+    is attribution: it lets a policy distinguish transport-deferred
+    workers from genuinely slow ones.
+    ``on_force_admit`` fires when the scheduler's liveness guard admits
+    a worker without consulting ``admit`` (fewer than K cycles in
+    flight): a blocklist must drain then, or selection could pin the
+    very workers the buffer needs.  ``scores`` exposes the current
+    utilities for telemetry.
     """
 
     def admit(self, app_idx: int, worker: int, now_ms: float) -> bool: ...
@@ -63,6 +73,10 @@ class ClientSelector(Protocol):
     def on_commit(self, app_idx: int, worker: int, now_ms: float, cycle_ms: float) -> None: ...
 
     def on_train(self, app_idx: int, worker: int, loss: float, delta_norm: float) -> None: ...
+
+    def on_defer(self, app_idx: int, worker: int, now_ms: float, waited_ms: float) -> None: ...
+
+    def on_force_admit(self, app_idx: int, worker: int) -> None: ...
 
     def scores(self, app_idx: int) -> dict[int, float]: ...
 
@@ -83,21 +97,33 @@ class UniformSelector:
     def on_train(self, app_idx: int, worker: int, loss: float, delta_norm: float) -> None:
         pass
 
+    def on_defer(self, app_idx: int, worker: int, now_ms: float, waited_ms: float) -> None:
+        pass
+
+    def on_force_admit(self, app_idx: int, worker: int) -> None:
+        pass
+
     def scores(self, app_idx: int) -> dict[int, float]:
         return {}
 
 
 class _ClientStats:
-    __slots__ = ("stat", "cycle_ms", "misses", "block_offers", "commits", "offers", "admitted")
+    __slots__ = (
+        "stat", "cycle_ms", "defer_ms", "misses", "block_offers",
+        "commits", "offers", "admitted", "defers", "force_admits",
+    )
 
     def __init__(self):
         self.stat = None  # EMA of loss (preferred) or delta norm
         self.cycle_ms = None  # EMA of observed cycle time
+        self.defer_ms = 0.0  # EMA of relay-admission hold time per cycle
         self.misses = 0  # consecutive deadline misses
         self.block_offers = 0  # offers left to decline (blocklist decay)
         self.commits = 0
         self.offers = 0
         self.admitted = 0
+        self.defers = 0
+        self.force_admits = 0
 
 
 class UtilitySelector:
@@ -148,6 +174,10 @@ class UtilitySelector:
 
     def _utility(self, st: _ClientStats) -> float:
         stat = 1.0 if st.stat is None else max(float(st.stat), 1e-6)
+        # relay-admission hold time already lands in the deadline term:
+        # the scheduler reports end-to-end cycle wall-clock, deferral
+        # included — defer_ms is kept separately only as attribution
+        # (transport-deferred vs genuinely slow), never added on top
         if st.cycle_ms is None or st.cycle_ms <= self.deadline_ms:
             sys_term = 1.0
         else:
@@ -181,6 +211,9 @@ class UtilitySelector:
     def on_commit(self, app_idx: int, worker: int, now_ms: float, cycle_ms: float) -> None:
         st = self._s(app_idx, worker)
         st.commits += 1
+        # defer attribution decays with each landed commit, mirroring the
+        # cycle EMA (a commit that was not deferred walks it toward zero)
+        st.defer_ms *= 1.0 - self.ema
         st.cycle_ms = (
             float(cycle_ms)
             if st.cycle_ms is None
@@ -197,6 +230,20 @@ class UtilitySelector:
         signal = float(loss) if np.isfinite(loss) else float(delta_norm)
         st = self._s(app_idx, worker)
         st.stat = signal if st.stat is None else self.ema * signal + (1.0 - self.ema) * st.stat
+
+    def on_defer(self, app_idx: int, worker: int, now_ms: float, waited_ms: float) -> None:
+        st = self._s(app_idx, worker)
+        st.defers += 1
+        st.defer_ms = self.ema * float(waited_ms) + (1.0 - self.ema) * st.defer_ms
+
+    def on_force_admit(self, app_idx: int, worker: int) -> None:
+        """Liveness-guard admission: drain the blocklist (satellite fix).
+        The scheduler needs this worker to keep the buffer filling, so a
+        standing block would only re-park it the moment pressure drops —
+        misses are kept, so a still-slow worker can re-earn its block."""
+        st = self._s(app_idx, worker)
+        st.force_admits += 1
+        st.block_offers = 0
 
     def scores(self, app_idx: int) -> dict[int, float]:
         return {

@@ -11,6 +11,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import fused_update as _fu
 from . import policy_update as _pu
@@ -84,6 +85,24 @@ def buffered_aggregate(updates: list, weights, staleness, *, alpha: float = 0.5)
     stacked = _stack_pytrees(updates)[None]  # (1, K, L)
     agg = tree_aggregate_groups(stacked, w[None])[0] / jnp.maximum(w.sum(), 1e-12)
     return _unflatten_like(agg, updates[0]), w
+
+
+def jain_fairness(x) -> float:
+    """Jain's fairness index ``(sum x)^2 / (n * sum x^2)`` in (0, 1].
+
+    Host-side telemetry used by the async scheduler's fairness log and
+    ``benchmarks/bench_fairness.py``: x is a vector of per-app uplink
+    throughputs (or progress rates); 1.0 means a perfectly even split,
+    ``1/n`` means one app holds everything.  An empty or all-zero vector
+    scores 1.0 (nothing to be unfair about)."""
+    v = np.asarray(x, np.float64)
+    if v.size == 0:
+        return 1.0
+    q = float(np.sum(v * v))
+    if q <= 0.0:
+        return 1.0
+    s = float(np.sum(v))
+    return (s * s) / (v.size * q)
 
 
 def qsgd_quantize(x: jax.Array, rand: jax.Array):
