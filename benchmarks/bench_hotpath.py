@@ -1,0 +1,265 @@
+"""Hot-path overhaul bench: the simulator racing its pre-optimization self.
+
+The reproduction's wall-clock was bound by its own hot paths, not the
+modeled system (ISSUE 5 / docs/performance.md): ragged commit batches
+recompiled ``batched_local_train`` per (W, B) shape, every Pallas kernel
+ran in interpret mode on CPU, and each flow join/complete re-ran full
+water-filling and rescheduled every flow's completion event.  This bench
+runs the SAME simulation twice — once on the pre-optimization paths
+(``megabatch=False, incremental=False``, kernel mode ``pallas``), once
+on the optimized defaults (megabatched bucketed dispatch, compiled jnp
+kernel fallback, incremental repricing) — and measures:
+
+- end-to-end wall-clock for a bench_async-style trained run at
+  M in {4, 16, 64} (smoke: {4, 16}) with heterogeneous compute + churn;
+- training dispatches and jit cache misses per run (``engine.DISPATCH``);
+- pure event-engine throughput (events/sec on a timing-model run, no
+  trainer) for the incremental vs legacy repricing engines, plus the
+  peak heap size (lazy-deletion compaction keeps it bounded).
+
+Gates (CI fails on regression):
+
+- end-to-end speedup at M=16 >= 3x (>= 2x in ``--smoke``: the smaller
+  run amortizes fewer recompiles);
+- event traces **byte-identical** between the two paths (repricing is
+  exact, just incremental; ApplyEvent/ChurnRecord dataclass equality
+  on exact float timestamps) and final losses equal to fp tolerance
+  (1e-6 — megabatch padding only reorders float reductions);
+- optimized jit cache misses bounded by the shape-bucket count
+  (O(#buckets), not O(#distinct ragged shapes)).
+
+``python -m benchmarks.bench_hotpath --smoke`` writes BENCH_hotpath.json
+(the CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import build_system, row
+
+
+def _bucket_bound(m_apps: int, workers: int) -> int:
+    """Upper bound on distinct compiled training programs under the
+    power-of-two bucket policy: one static config here, W buckets up to
+    bucket(workers * m-ish) and B buckets up to bucket(max shard).  Loose
+    on purpose — the gate is O(log^2), not an exact count."""
+    logw = int(math.log2(max(2, workers * m_apps))) + 2
+    logb = 12  # B <= 2**12 covers every shard size the benches use
+    return logw * logb
+
+
+def _run_trained(m_apps, *, optimized, workers, applies, seed, base_ms, spread,
+                 model_bytes, n_nodes, zones):
+    """One trained async run on fresh, seed-identical state; returns
+    (result dict, wall seconds, dispatch stats snapshot)."""
+    from benchmarks.bench_async import _make_apps
+    from repro.core.sim import ChurnModel
+    from repro.fl import async_engine, engine
+    from repro.kernels import ops as kops
+
+    per_worker = async_engine.worker_compute_fn(base_ms, spread, seed=seed)
+    sys_a, nodes_a, rng_a = build_system(n_nodes=n_nodes, zones=zones, seed=seed)
+    apps_a = _make_apps(sys_a, nodes_a, rng_a, m_apps, workers, tag="h")
+    churn = ChurnModel(
+        period_ms=6.0 * base_ms, downtime_ms=12.0 * base_ms,
+        group_size=max(1, round(0.1 * workers)), seed=seed,
+    )
+    prev_mode = kops.set_kernel_mode("auto" if optimized else "pallas")
+    prev_bucketing = engine.set_bucketing(optimized)
+    engine.DISPATCH.reset()
+    t0 = time.perf_counter()
+    try:
+        res = async_engine.run_async(
+            sys_a, apps_a, applies=applies, buffer_k=max(2, workers // 2),
+            staleness_alpha=0.5, model_bytes=model_bytes, compute_ms=per_worker,
+            churn=churn, megabatch=optimized, incremental=optimized,
+        )
+    finally:
+        kops.set_kernel_mode(prev_mode)
+        engine.set_bucketing(prev_bucketing)
+    wall = time.perf_counter() - t0
+    stats = {
+        "dispatches": engine.DISPATCH.dispatches,
+        "jit_cache_misses": engine.DISPATCH.compiles,
+    }
+    return res, wall, stats
+
+
+def _run_timing_model(m_apps, *, incremental, workers, applies, seed, base_ms,
+                      spread, model_bytes, n_nodes, zones):
+    """Pure event-engine run (no trainer): events/sec + peak heap size."""
+    from benchmarks.bench_async import _make_apps
+    from repro.core.sim import AsyncBufferScheduler, ChurnModel
+    from repro.fl import async_engine
+
+    per_worker = async_engine.worker_compute_fn(base_ms, spread, seed=seed)
+    sys_a, nodes_a, rng_a = build_system(n_nodes=n_nodes, zones=zones, seed=seed)
+    apps_a = _make_apps(sys_a, nodes_a, rng_a, m_apps, workers, tag="t")
+    churn = ChurnModel(
+        period_ms=6.0 * base_ms, downtime_ms=12.0 * base_ms,
+        group_size=max(1, round(0.1 * workers)), seed=seed,
+    )
+    sched = AsyncBufferScheduler(
+        sys_a, [a.handle for a in apps_a], model_bytes=model_bytes,
+        compute_ms=per_worker, buffer_k=max(2, workers // 2), churn=churn,
+        incremental=incremental,
+    )
+    t0 = time.perf_counter()
+    events = sched.run(applies)
+    wall = time.perf_counter() - t0
+    return {
+        "events": events,
+        "wall_s": wall,
+        "events_dispatched": sched.events_dispatched,
+        "events_per_sec": sched.events_dispatched / max(wall, 1e-9),
+        "heap_max": sched.heap_max,
+    }
+
+
+def hotpath_compare(m_apps: int, *, workers=8, applies=3, timing_applies=12,
+                    seed=0, base_ms=40.0, spread=6.0, model_bytes=2e5,
+                    n_nodes=600, zones=4) -> dict:
+    """Baseline vs optimized on identical seeds/topology/churn.  The
+    baseline runs FIRST so any jit-cache sharing between the two runs
+    favors it.  Returns the metric dict (no gating here; see gate())."""
+    cfg = dict(workers=workers, applies=applies, seed=seed, base_ms=base_ms,
+               spread=spread, model_bytes=model_bytes, n_nodes=n_nodes, zones=zones)
+    res_b, wall_b, disp_b = _run_trained(m_apps, optimized=False, **cfg)
+    res_o, wall_o, disp_o = _run_trained(m_apps, optimized=True, **cfg)
+
+    losses_b = [r["loss"] for r in res_b["history"]]
+    losses_o = [r["loss"] for r in res_o["history"]]
+    loss_max_diff = (
+        max((abs(a - b) for a, b in zip(losses_b, losses_o)), default=0.0)
+        if len(losses_b) == len(losses_o)
+        else float("inf")
+    )
+    tm_cfg = dict(workers=workers, applies=timing_applies, seed=seed,
+                  base_ms=base_ms, spread=spread, model_bytes=model_bytes,
+                  n_nodes=n_nodes, zones=zones)
+    tm_legacy = _run_timing_model(m_apps, incremental=False, **tm_cfg)
+    tm_inc = _run_timing_model(m_apps, incremental=True, **tm_cfg)
+
+    applies_total = max(len(res_o["events"]), 1)
+    return {
+        "m": m_apps,
+        "workers": workers,
+        "applies": applies,
+        "wall_s_baseline": wall_b,
+        "wall_s_optimized": wall_o,
+        "speedup": wall_b / max(wall_o, 1e-9),
+        "traces_identical": res_b["events"] == res_o["events"]
+        and res_b["churn"] == res_o["churn"]
+        and tm_legacy["events"] == tm_inc["events"],
+        "loss_max_diff": loss_max_diff,
+        "dispatches_baseline": disp_b["dispatches"],
+        "dispatches_optimized": disp_o["dispatches"],
+        "dispatches_per_apply_baseline": disp_b["dispatches"] / applies_total,
+        "dispatches_per_apply_optimized": disp_o["dispatches"] / applies_total,
+        "jit_cache_misses_baseline": disp_b["jit_cache_misses"],
+        "jit_cache_misses_optimized": disp_o["jit_cache_misses"],
+        "bucket_bound": _bucket_bound(m_apps, workers),
+        "events_per_sec_legacy": tm_legacy["events_per_sec"],
+        "events_per_sec_incremental": tm_inc["events_per_sec"],
+        "events_speedup": tm_inc["events_per_sec"]
+        / max(tm_legacy["events_per_sec"], 1e-9),
+        "heap_max_legacy": tm_legacy["heap_max"],
+        "heap_max_incremental": tm_inc["heap_max"],
+    }
+
+
+def gate(results: list[dict], *, min_speedup_m16: float) -> list[str]:
+    """The acceptance gates; returns failure messages (empty = pass)."""
+    fails = []
+    for r in results:
+        if not r["traces_identical"]:
+            fails.append(f"M={r['m']}: event traces diverge between paths")
+        if not (r["loss_max_diff"] <= 1e-6):
+            fails.append(
+                f"M={r['m']}: final losses diverge (max diff {r['loss_max_diff']:.2e})"
+            )
+        if r["jit_cache_misses_optimized"] > r["bucket_bound"]:
+            fails.append(
+                f"M={r['m']}: {r['jit_cache_misses_optimized']} jit cache misses "
+                f"exceed the bucket bound {r['bucket_bound']}"
+            )
+        if r["m"] == 16 and r["speedup"] < min_speedup_m16:
+            fails.append(
+                f"M=16 speedup {r['speedup']:.2f}x below the "
+                f"{min_speedup_m16:.1f}x gate"
+            )
+    return fails
+
+
+def run() -> list[str]:
+    out = []
+    for m in (4, 16):
+        r = hotpath_compare(m)
+        out.append(
+            row(
+                f"hotpath_m{m}",
+                r["wall_s_optimized"] * 1e6,
+                f"speedup={r['speedup']:.2f}x;"
+                f"events_per_sec={r['events_per_sec_incremental']:.0f}"
+                f"(x{r['events_speedup']:.2f});"
+                f"dispatches_per_apply={r['dispatches_per_apply_optimized']:.2f};"
+                f"jit_misses={r['jit_cache_misses_optimized']};"
+                f"traces_identical={r['traces_identical']}",
+            )
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config (M in {4,16}, 2x gate); write artifact")
+    ap.add_argument("--out", default="BENCH_hotpath.json")
+    args = ap.parse_args()
+    if args.smoke:
+        ms, applies, min_speedup = (4, 16), 2, 2.0
+    else:
+        ms, applies, min_speedup = (4, 16, 64), 3, 3.0
+    results = [hotpath_compare(m, applies=applies) for m in ms]
+    payload = {
+        "bench": "hotpath_megabatch_jnp_fallback_incremental_repricing",
+        "smoke": bool(args.smoke),
+        "min_speedup_m16": min_speedup,
+        "results": results,
+    }
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, allow_nan=False)
+    for r in results:
+        print(
+            f"M={r['m']}: wall {r['wall_s_baseline']:.1f}s -> "
+            f"{r['wall_s_optimized']:.1f}s ({r['speedup']:.2f}x); "
+            f"events/s {r['events_per_sec_legacy']:.0f} -> "
+            f"{r['events_per_sec_incremental']:.0f}; dispatches/apply "
+            f"{r['dispatches_per_apply_baseline']:.2f} -> "
+            f"{r['dispatches_per_apply_optimized']:.2f}; jit misses "
+            f"{r['jit_cache_misses_baseline']} -> {r['jit_cache_misses_optimized']}; "
+            f"heap max {r['heap_max_legacy']} -> {r['heap_max_incremental']}; "
+            f"traces identical {r['traces_identical']} "
+            f"(loss diff {r['loss_max_diff']:.1e})"
+        )
+    fails = gate(results, min_speedup_m16=min_speedup)
+    print(f"wrote {out_path}")
+    for msg in fails:
+        print(f"GATE FAIL: {msg}")
+    if fails:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

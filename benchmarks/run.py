@@ -26,6 +26,8 @@ REGISTRY: list[tuple[str, str, str]] = [
      "sync vs fixed-K vs adaptive-K vs adaptive-K+utility time-to-target-loss under churn"),
     ("fairness(TabIII)", "benchmarks.bench_fairness",
      "multi-app uplink fairness: weighted-fair re-pricing vs legacy start-time pricing, Jain's index at M in {4,16,64}"),
+    ("hotpath(perf)", "benchmarks.bench_hotpath",
+     "simulator hot paths: megabatched dispatch + compiled kernel fallback + incremental repricing vs the pre-optimization engine (>=3x gate, byte-identical traces)"),
     ("scalability(Fig5)", "benchmarks.bench_scalability",
      "overlay join/route cost vs network size"),
     ("hops(Fig6)", "benchmarks.bench_hops",

@@ -8,6 +8,7 @@ link-success draw with mean theta_p.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass
 from functools import partial
 
@@ -92,6 +93,112 @@ def fair_share_rates(
             active.remove(i)
         avail = max(0.0, avail)
     return rates
+
+
+class UplinkState:
+    """Incremental weighted max-min fair allocator for ONE uplink.
+
+    The legacy path rebuilt everything per flow join/complete: a group-
+    count dict, weight/cap lists, then ``fair_share_rates``'s progressive
+    relaxation — O(F) dict churn plus O(F x rounds) water-filling (worst
+    case O(F^2) when caps bind one at a time).  This structure makes the
+    per-event update cheap:
+
+    - membership and per-group flow counts are maintained incrementally
+      (``add``/``remove`` are O(log F): a dict insert plus one bisect
+      into the capped-flow ladder);
+    - capped flows sit in a ladder sorted by their cap-to-weight ratio
+      ``cap_i / w_i`` — invariant under group-count changes, since group
+      splitting divides cap and weight alike — so ``rates()`` resolves
+      the water-filling level with ONE ascending walk over the ladder
+      (O(#capped)) instead of progressive relaxation over all flows;
+    - the uncapped fast path (no ladder entries — the common case) is a
+      single pass, **bit-for-bit identical** to ``fair_share_rates``:
+      same sequential weight sum in flow-insertion order, same
+      ``capacity * w_i / wsum`` division.  That exactness is what lets
+      the incremental event engine keep byte-identical traces
+      (bench_hotpath's gate).  The weight sum is deliberately re-summed
+      per call (O(F) float adds on a list walk — cheap) rather than
+      maintained by +=/-=: float addition is not associative, and an
+      incrementally drifted sum would break trace identity.
+
+    Flows in one ``group`` split a single weight share and cap equally
+    (per-app fairness), exactly as the legacy engine computed it.
+    """
+
+    __slots__ = ("capacity", "_flows", "_group_n", "_ladder")
+
+    def __init__(self, capacity: float):
+        self.capacity = float(capacity)
+        # fid -> (weight, cap, group); dict preserves insertion order,
+        # which IS the legacy flow order (list append order)
+        self._flows: dict[int, tuple[float, float | None, object]] = {}
+        self._group_n: dict = {}
+        self._ladder: list[tuple[float, int]] = []  # (cap/weight, fid) ascending
+
+    def __len__(self) -> int:
+        return len(self._flows)
+
+    def add(self, fid: int, weight: float, cap: float | None, group) -> None:
+        self._flows[fid] = (float(weight), cap, group)
+        self._group_n[group] = self._group_n.get(group, 0) + 1
+        if cap is not None:
+            bisect.insort(self._ladder, (float(cap) / float(weight), fid))
+
+    def remove(self, fid: int) -> None:
+        weight, cap, group = self._flows.pop(fid)
+        n = self._group_n[group] - 1
+        if n:
+            self._group_n[group] = n
+        else:
+            del self._group_n[group]
+        if cap is not None:
+            i = bisect.bisect_left(self._ladder, (cap / weight, fid))
+            while self._ladder[i][1] != fid:  # equal ratios: scan the tie run
+                i += 1
+            self._ladder.pop(i)
+
+    def rates(self, *, eps: float = 1e-9) -> list[float]:
+        """Fair rates for every flow, in insertion (fid-arrival) order."""
+        if not self._flows:
+            return []
+        gn = self._group_n
+        if not self._ladder:
+            # uncapped fast path: identical arithmetic to fair_share_rates
+            weights = [w / gn[g] for w, _, g in self._flows.values()]
+            wsum = sum(weights)
+            if wsum <= eps:
+                return [0.0] * len(weights)
+            return [self.capacity * w / wsum for w in weights]
+        # capped path: walk the ladder ascending to find the binding set.
+        # A flow is capped iff its ratio cap_i/w_i (group-invariant) lies
+        # at or below the final water level avail/wsum_uncapped; walking
+        # in ascending ratio order caps flows exactly in the order the
+        # progressive relaxation would freeze them.
+        weights = {fid: w / gn[g] for fid, (w, _, g) in self._flows.items()}
+        wsum = sum(weights.values())
+        avail = self.capacity
+        capped: dict[int, float] = {}
+        for ratio, fid in self._ladder:
+            if wsum <= eps or avail <= eps:
+                break
+            w, cap, g = self._flows[fid]
+            cap_eff = cap / gn[g]
+            if cap_eff <= avail * weights[fid] / wsum + eps:
+                capped[fid] = cap_eff
+                avail = max(0.0, avail - cap_eff)
+                wsum -= weights[fid]
+            else:
+                break  # ladder is sorted: no later flow can bind either
+        out = []
+        for fid, (w, _, g) in self._flows.items():
+            if fid in capped:
+                out.append(capped[fid])
+            elif wsum <= eps or avail <= eps:
+                out.append(0.0)
+            else:
+                out.append(avail * weights[fid] / wsum)
+        return out
 
 
 def make_env(num_paths: int, *, seed: int = 0, bw_range=(20.0, 100.0), theta_range=(0.9, 1.0)) -> CongestionEnv:

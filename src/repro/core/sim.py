@@ -58,6 +58,24 @@ This module splits that into an event core plus two schedulers:
   (utility-based straggler avoidance), with ``selector=None`` /
   ``UniformSelector`` preserving the admit-everyone behavior.
 
+- **Hot-path overhaul** (this PR): transfer pricing and event plumbing
+  were the simulator's own bottleneck at M >= 16.  Three exact-semantics
+  optimizations, all defaulting on: (1) *incremental repricing* — each
+  uplink keeps a ``core/congestion.UplinkState`` (incremental group
+  counts + a cap ladder sorted by the group-invariant ``cap/weight``
+  ratio) and schedules ONE completion event (the earliest finisher)
+  instead of one per flow, so a flow join/complete costs O(F) float
+  adds + O(log H) heap work instead of O(F log H) pushes that each left
+  a dead heap entry behind; (2) *lazy-deletion heap compaction* —
+  cancelled events are counted and the heap is rebuilt once dead
+  entries outnumber live ones, bounding heap size under churn; (3)
+  *numpy-resident route tables* — ``transfer_ms`` prices phases with
+  f32 numpy arithmetic (bit-identical to the jitted lookup it
+  replaces) and ``_path_senders`` memoizes per-(app, worker, direction)
+  sender arrays between churn events.  ``incremental=False`` restores
+  the full-water-filling engine; traces are byte-identical either way
+  (gated by benchmarks/bench_hotpath.py).
+
 Units and invariants: the clock is simulated milliseconds (``now``,
 every ``*_ms``); transfer sizes are bytes (``model_bytes``), converted
 once to megabits for ``CongestionEnv``; staleness is counted in model
@@ -75,7 +93,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from .congestion import CongestionEnv, fair_share_rates
+from .congestion import CongestionEnv, UplinkState, fair_share_rates
 
 
 @dataclass(frozen=True)
@@ -201,15 +219,20 @@ class EventCore:
     as active flows until their completion event pops.
     """
 
-    def __init__(self, system, handles, *, model_bytes: float, base_ms: float = 5.0):
+    def __init__(
+        self, system, handles, *, model_bytes: float, base_ms: float = 5.0,
+        incremental: bool = True,
+    ):
         self.system = system
         self.handles = list(handles)
         nodes = system.overlay.nodes()
         self._node_idx = {n: i for i, n in enumerate(nodes)}
         cap = np.asarray([system.overlay.bandwidth[n] for n in nodes], np.float32)
         self._cap_mbps = cap.astype(np.float64)
+        self._cap_f32 = cap  # numpy-resident mirror for transfer_ms
         self.model_bytes = float(model_bytes)
         self.base_ms = float(base_ms)
+        self.incremental = bool(incremental)
         self.env = CongestionEnv(
             capacity=jnp.asarray(cap),
             theta=jnp.ones(len(nodes), jnp.float32),
@@ -217,24 +240,36 @@ class EventCore:
             base_ms=base_ms,
         )
         self.now = 0.0
+        self.events_dispatched = 0
+        self.heap_max = 0
         self._heap: list[tuple[float, int]] = []
         self._seq = 0
+        self._dead = 0  # cancelled-but-unpopped heap entries (lazy deletion)
         self._active: dict[int, np.ndarray] = {}  # event seq -> sender idx array
         self._callbacks: dict[int, Callable | None] = {}
         # fluid fair-share flows (weighted processor sharing per uplink)
         self._flows: dict[int, _Flow] = {}
         self._flows_by_sender: dict[int, list[int]] = {}
         self._flow_seq = 0
+        # incremental-repricing state: one allocator + at most one pending
+        # completion event per uplink (instead of one event per flow)
+        self._uplink_state: dict[int, UplinkState] = {}
+        self._uplink_ev: dict[int, int] = {}
 
     def _reset_clock(self) -> None:
         self.now = 0.0
+        self.events_dispatched = 0
+        self.heap_max = 0
         self._heap.clear()
         self._seq = 0
+        self._dead = 0
         self._active.clear()
         self._callbacks.clear()
         self._flows.clear()
         self._flows_by_sender.clear()
         self._flow_seq = 0
+        self._uplink_state.clear()
+        self._uplink_ev.clear()
 
     def sender_indices(self, nodes) -> np.ndarray:
         return np.asarray([self._node_idx[n] for n in nodes], np.int32)
@@ -244,14 +279,26 @@ class EventCore:
         per-flow latency = base + bits / (capacity_sender / k) where k is
         the number of concurrent flows sharing that sender's uplink.
         ``reduce="max"`` models parallel flows (phase ends when the
-        slowest does); ``"sum"`` models store-and-forward along a path."""
+        slowest does); ``"sum"`` models store-and-forward along a path.
+
+        Runs on numpy-resident route/capacity tables: the old path built
+        device arrays and dispatched a jitted lookup per *phase*, which
+        recompiled for every distinct in-flight flow count.  The numpy
+        arithmetic is f32 elementwise, bit-identical to the jitted
+        ``CongestionEnv.latency_ms`` (sync traces are unchanged)."""
         if len(senders) == 0:
             return 0.0
-        flows = [senders] + list(self._active.values())
-        actions = jnp.asarray(np.concatenate(flows))
-        lat = np.asarray(self.env.latency_ms(actions))
-        own = lat[: len(senders)]
-        return float(own.sum() if reduce == "sum" else own.max())
+        own = np.asarray(senders)
+        if self._active:
+            actions = np.concatenate([own] + list(self._active.values()))
+        else:
+            actions = own
+        counts = np.bincount(actions, minlength=len(self._cap_f32)).astype(np.float32)
+        rate = self._cap_f32[own] / np.maximum(counts[own], np.float32(1.0))
+        lat = np.float32(self.base_ms) + np.float32(
+            1e3 * self.env.packet_mbit
+        ) / np.maximum(rate, np.float32(1e-6))
+        return float(lat.sum() if reduce == "sum" else lat.max())
 
     def schedule(self, delay_ms: float, callback: Callable, senders: np.ndarray | None = None) -> int:
         """Push a completion event ``delay_ms`` from now; ``senders`` (if
@@ -263,15 +310,36 @@ class EventCore:
             self._active[seq] = senders
         self._callbacks[seq] = callback
         heapq.heappush(self._heap, (self.now + delay_ms, seq))
+        if len(self._heap) > self.heap_max:
+            self.heap_max = len(self._heap)  # telemetry: peak incl. dead entries
         return seq
 
     def cancel(self, seq: int) -> None:
         """Void a pending event (its flows stop contending immediately).
         Safe on an already-fired seq (the fair path re-cancels the last
-        leg event of a cycle wholesale on churn)."""
-        if seq in self._callbacks:
+        leg event of a cycle wholesale on churn).
+
+        Cancellation is lazy — the heap entry stays until popped — but
+        counted: once dead entries outnumber live ones the heap is
+        compacted, so churn- and reprice-cancelled events can no longer
+        bloat ``run_events`` for the rest of a run (regression:
+        tests/test_hotpath.py)."""
+        if self._callbacks.get(seq) is not None:
             self._callbacks[seq] = None
+            self._dead += 1
+            if self._dead > 64 and self._dead * 2 > len(self._heap):
+                self._compact_heap()
         self._active.pop(seq, None)
+
+    def _compact_heap(self) -> None:
+        """Drop every dead (cancelled) entry and re-heapify in O(live)."""
+        cbs = self._callbacks
+        self._heap = [e for e in self._heap if cbs.get(e[1]) is not None]
+        heapq.heapify(self._heap)
+        for seq in [s for s, cb in cbs.items() if cb is None]:
+            del cbs[seq]
+            self._active.pop(seq, None)
+        self._dead = 0
 
     # -- fluid fair-share flows (weighted-fair transfer pricing) ---------------
 
@@ -301,6 +369,13 @@ class EventCore:
         f.t_last = self.now
         self._flows[fid] = f
         self._flows_by_sender.setdefault(f.sender, []).append(fid)
+        if self.incremental:
+            st = self._uplink_state.get(f.sender)
+            if st is None:
+                st = self._uplink_state[f.sender] = UplinkState(
+                    float(self._cap_mbps[f.sender])
+                )
+            st.add(fid, f.weight, f.rate_cap, key)
         self._reprice_uplink(f.sender)
         return fid
 
@@ -326,12 +401,52 @@ class EventCore:
             fids.remove(f.fid)
             if not fids:
                 del self._flows_by_sender[f.sender]
+        if self.incremental:
+            self._uplink_state[f.sender].remove(f.fid)
 
     def _reprice_uplink(self, sender: int) -> None:
         """Progress-preserving re-price of every flow on one uplink:
         credit bytes delivered at the old rates since the last update,
-        recompute the weighted-fair rates, reschedule each completion at
-        ``remaining / new_rate`` (a virtual-finish-time update)."""
+        recompute the weighted-fair rates, reschedule the completion(s)
+        at ``remaining / new_rate`` (a virtual-finish-time update).
+
+        Incremental mode (the default) gets the rates from the uplink's
+        ``UplinkState`` (group counts and the sorted cap ladder are
+        maintained on join/complete, not rebuilt here) and schedules ONE
+        completion event — the earliest finisher — instead of one per
+        flow: a reprice costs O(F) float work + O(log H) heap work where
+        the legacy path paid O(F log H) pushes and left F dead heap
+        entries behind.  Completion times are computed with the same
+        arithmetic in the same flow order, so event traces are
+        byte-identical across both modes (bench_hotpath's gate).
+        """
+        if self.incremental:
+            prev = self._uplink_ev.pop(sender, None)
+            if prev is not None:
+                self.cancel(prev)
+            fids = self._flows_by_sender.get(sender)
+            if not fids:
+                return
+            flows = [self._flows[fid] for fid in fids]
+            now = self.now
+            for f in flows:
+                f.delivered_mbit = min(
+                    f.total_mbit, f.delivered_mbit + f.rate * (now - f.t_last) * 1e-3
+                )
+                f.t_last = now
+            rates = self._uplink_state[sender].rates()
+            best_fid, best_delay = None, None
+            for f, r in zip(flows, rates):
+                f.rate = r
+                d = 1e3 * (f.total_mbit - f.delivered_mbit) / max(r, 1e-9)
+                # strict < keeps the earliest-opened flow on ties, matching
+                # the legacy per-flow events' seq-order tie-break
+                if best_delay is None or d < best_delay:
+                    best_fid, best_delay = f.fid, d
+            self._uplink_ev[sender] = self.schedule(
+                best_delay, lambda t, fid=best_fid: self._finish_flow(fid, t)
+            )
+            return
         fids = self._flows_by_sender.get(sender)
         if not fids:
             return
@@ -384,10 +499,13 @@ class EventCore:
             self._active.pop(seq, None)
             cb = self._callbacks.pop(seq, None)
             if cb is None:
+                if self._dead:
+                    self._dead -= 1
                 continue  # cancelled
             self.now = t
             cb(t)
             n += 1
+            self.events_dispatched += 1
             if n >= max_events:
                 raise RuntimeError(f"event budget exhausted ({max_events})")
 
@@ -736,8 +854,12 @@ class AsyncBufferScheduler(EventCore):
         app_weights: float | list[float] | None = None,
         app_rate_caps: float | list[float] | None = None,
         relay_admission: RelayAdmission | None = None,
+        incremental: bool = True,
     ):
-        super().__init__(system, handles, model_bytes=model_bytes, base_ms=base_ms)
+        super().__init__(
+            system, handles, model_bytes=model_bytes, base_ms=base_ms,
+            incremental=incremental,
+        )
         self.compute_ms = compute_ms
         self.trainer = trainer
         self.barrier = barrier
@@ -788,6 +910,7 @@ class AsyncBufferScheduler(EventCore):
         self._defer_count: list[int] = []
         self._deferred: dict[int, list[dict]] = {}  # relay -> FIFO of records
         self._deferred_by_key: dict[tuple[int, int], dict] = {}
+        self._path_cache: dict[tuple[int, int, bool], np.ndarray] = {}
 
     def _per_app(self, value, handle_attr: str, default):
         """Resolve a per-app knob: explicit arg (scalar broadcast or
@@ -822,12 +945,23 @@ class AsyncBufferScheduler(EventCore):
     # -- per-worker cycle ------------------------------------------------------
 
     def _path_senders(self, ai: int, w: int, *, up: bool) -> np.ndarray:
-        tree = self.handles[ai].tree
-        if w == tree.root:
-            return np.asarray([], np.int32)
-        path = tree.path_to_root(w)  # w -> root
-        hops = path if up else list(reversed(path))
-        return self.sender_indices(hops[:-1])
+        """Sender index array for one leg, memoized on a numpy-resident
+        route table: trees only change on churn (fail/repair/rejoin), so
+        the per-cycle ``path_to_root`` walks + dict lookups are paid once
+        per (app, worker, direction) between churn events — churn
+        handlers clear the cache wholesale after repairs."""
+        key = (ai, w, up)
+        cached = self._path_cache.get(key)
+        if cached is None:
+            tree = self.handles[ai].tree
+            if w == tree.root:
+                cached = np.asarray([], np.int32)
+            else:
+                path = tree.path_to_root(w)  # w -> root
+                hops = path if up else list(reversed(path))
+                cached = self.sender_indices(hops[:-1])
+            self._path_cache[key] = cached
+        return cached
 
     def _offer_cycle(self, ai: int, w: int) -> None:
         """Gate a worker's next cycle through the selector (if any).
@@ -1161,6 +1295,7 @@ class AsyncBufferScheduler(EventCore):
         victims = self.churn.pick_victims(self._victim_pool())
         self.churn.fired += 1
         if victims:
+            self._path_cache.clear()  # repairs re-graft arbitrary subtrees
             overlay = self.system.overlay
             rejoin_info = {
                 n: (overlay.space.zone_of(n), overlay.space.suffix_of(n),
@@ -1245,6 +1380,7 @@ class AsyncBufferScheduler(EventCore):
                     self._offer_cycle(ai, lw)
 
     def _on_churn_rejoin(self, t: float, victims: list[int], info: dict) -> None:
+        self._path_cache.clear()  # re-Subscribes re-graft the rejoiners
         overlay = self.system.overlay
         rejoined = []
         for n in victims:
@@ -1297,6 +1433,7 @@ class AsyncBufferScheduler(EventCore):
         self._defer_count = [0] * n
         self._deferred = {}
         self._deferred_by_key = {}
+        self._path_cache = {}
         self.history = []
         self.churn_log = []
         self.defer_log = []

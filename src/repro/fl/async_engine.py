@@ -52,13 +52,15 @@ class AsyncTrainer:
     """
 
     def __init__(
-        self, system, apps, *, staleness_alpha: float = 0.5, replicate: bool = True, selector=None
+        self, system, apps, *, staleness_alpha: float = 0.5, replicate: bool = True,
+        selector=None, megabatch: bool = True,
     ):
         self.system = system
         self.apps = list(apps)
         self.staleness_alpha = float(staleness_alpha)
         self.replicate = replicate
         self.selector = selector
+        self.megabatch = bool(megabatch)
         n = len(self.apps)
         self.version = [0] * n
         self._snapshots = [{0: a.params} for a in self.apps]  # version -> params
@@ -114,12 +116,25 @@ class AsyncTrainer:
         groups: dict[int, list[int]] = {}
         for w, v in pending:
             groups.setdefault(v, []).append(w)
-        losses, loss_weights = [], []
-        for v in sorted(groups):
-            ws = groups[v]
-            deltas, weights, group_losses = engine.local_training(
-                app, ws, params=self._snapshots[ai][v]
+        versions = sorted(groups)
+        if self.megabatch:
+            # every version group of this apply stacks into ONE compiled
+            # dispatch: megabatched_local_train carries per-worker start
+            # params, so staleness-ragged buffers stop costing one XLA
+            # program (and often one compile) per version
+            trained = engine.fused_local_training(
+                [(app, groups[v], self._snapshots[ai][v]) for v in versions]
             )
+        else:  # pre-optimization path: one dispatch per version group
+            trained = [
+                engine.local_training(
+                    app, groups[v], params=self._snapshots[ai][v], bucketed=False
+                )
+                for v in versions
+            ]
+        losses, loss_weights = [], []
+        for v, (deltas, weights, group_losses) in zip(versions, trained):
+            ws = groups[v]
             for w, d, wt, l in zip(ws, deltas, weights, group_losses):
                 self.system.CommitDelta(
                     app.handle.app_id, w, d, weight=wt, staleness=cur - v
@@ -196,10 +211,17 @@ def run_async(
     app_weights=None,
     app_rate_caps=None,
     relay_admission=None,
+    megabatch: bool = True,
+    incremental: bool = True,
 ) -> dict:
     """Wire an ``AsyncTrainer`` under an ``AsyncBufferScheduler`` and run
     every app to ``applies`` buffered updates.  Returns the scheduler
     apply events, churn log, and the trainer's loss-vs-simtime history.
+
+    ``megabatch=False`` restores the per-version-group dispatch loop and
+    ``incremental=False`` the full-water-filling repricing engine — the
+    pre-optimization hot paths kept as bench_hotpath baselines (both
+    default on; results match to fp tolerance, event traces exactly).
 
     ``adaptive=True`` turns on per-app ``AdaptiveKController``s
     (``buffer_k`` seeds K); ``selector`` plugs a
@@ -212,7 +234,10 @@ def run_async(
     commits at contended relays."""
     from repro.core.sim import AsyncBufferScheduler
 
-    trainer = AsyncTrainer(system, apps, staleness_alpha=staleness_alpha, selector=selector)
+    trainer = AsyncTrainer(
+        system, apps, staleness_alpha=staleness_alpha, selector=selector,
+        megabatch=megabatch,
+    )
     sched = AsyncBufferScheduler(
         system,
         [a.handle for a in apps],
@@ -230,6 +255,7 @@ def run_async(
         app_weights=app_weights,
         app_rate_caps=app_rate_caps,
         relay_admission=relay_admission,
+        incremental=incremental,
     )
     events = sched.run(applies)
     return {
@@ -244,11 +270,20 @@ def run_async(
 def worker_compute_fn(base_ms: float = 40.0, spread: float = 6.0, seed: int = 0):
     """Deterministic heterogeneous edge-compute model: each (app, worker)
     draws a fixed slowdown in [1, spread] from a seeded hash — the same
-    worker is always the same straggler, for sync and async alike."""
+    worker is always the same straggler, for sync and async alike.  The
+    draw is memoized per (app, worker): it is called once per cycle
+    event, and re-seeding a Generator each call was a measurable event-
+    loop cost at M >= 16 (same values either way)."""
+
+    cache: dict[tuple[int, int], float] = {}
 
     def per_worker(handle, worker, cycle: int = 0):
-        rng = np.random.default_rng([seed, handle.app_id, worker])
-        return base_ms * (1.0 + (spread - 1.0) * float(rng.random()))
+        key = (handle.app_id, worker)
+        ms = cache.get(key)
+        if ms is None:
+            rng = np.random.default_rng([seed, handle.app_id, worker])
+            ms = cache[key] = base_ms * (1.0 + (spread - 1.0) * float(rng.random()))
+        return ms
 
     return per_worker
 

@@ -79,6 +79,19 @@ def run_round(
     return engine.run_round(system, app, use_kernel=use_kernel, vectorized=vectorized)
 
 
+def run_round_fused(system: TotoroSystem, apps: list[FLApp], *, use_kernel: bool = True) -> list[dict]:
+    """One round for many apps with a single fused training dispatch.
+
+    Delegates to ``fl/engine.run_round_fused``: same-config apps stack
+    into one megabatched vmap (per-worker start params, shape-bucketed
+    padding) and deltas unstack per app — per-app results match
+    ``run_round`` to fp tolerance while dispatches per round drop from
+    M to the number of distinct static configs."""
+    from repro.fl import engine
+
+    return engine.run_round_fused(system, apps, use_kernel=use_kernel)
+
+
 def run_async(
     system: TotoroSystem,
     apps: list[FLApp],

@@ -6,5 +6,12 @@ policy_update — Algorithm 1 lines 5-8, batched over nodes
 fused_update  — fused SGD + FedProx proximal + weight decay
 
 Each: pl.pallas_call + explicit BlockSpec VMEM tiling; ops.py = jit'd
-public wrappers (interpret=True off-TPU); ref.py = pure-jnp oracles.
+public wrappers; ref.py = pure-jnp oracles.
+
+Off-TPU the wrappers route to the *compiled* jnp oracles instead of
+Pallas interpret mode (which executes the kernel body per grid point at
+Python speed): ``ops.kernel_mode()`` is ``auto`` | ``pallas`` | ``jnp``,
+settable via ``ops.set_kernel_mode`` or ``REPRO_KERNEL_MODE``.  The
+Pallas source is unchanged and remains the TPU path; parity between the
+paths is property-tested (tests/test_kernels.py, tests/test_hotpath.py).
 """

@@ -1,13 +1,34 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd wrappers for the Pallas kernels, with a compiled fallback.
 
-On CPU (this container) the kernels run in ``interpret=True`` mode — the
-kernel body executes as pure JAX for correctness validation; on TPU (the
-target) they compile through Mosaic.  Wrappers handle padding to the
-kernels' tile multiples and pytree-level application.
+Two execution paths per kernel (selected by ``kernel_mode()``):
+
+- **Pallas** — the TPU target.  On TPU the kernels compile through
+  Mosaic; off-TPU the same source runs in ``interpret=True`` mode, which
+  executes the kernel body per grid point at Python speed.  Interpret
+  mode is the correctness anchor, not a production path — it made every
+  CPU aggregation call a simulator hot spot.
+- **Compiled jnp fallback** — the ``ref.py`` oracles (the kernels'
+  correctness contract) jitted directly, selected automatically whenever
+  the Pallas path would have interpreted (``mode="auto"``, the default).
+  The update kernel donates its parameter buffer so the fallback is an
+  in-place read-modify-write like the fused Pallas kernel.
+
+Modes: ``auto`` (jnp off-TPU, Pallas on TPU), ``pallas`` (always Pallas
+— interpret off-TPU; the pre-optimization behavior, kept for parity
+tests and benchmark baselines), ``jnp`` (always the compiled fallback).
+Set via ``set_kernel_mode`` or the ``REPRO_KERNEL_MODE`` env var.
+
+To keep recompiles at O(#buckets) instead of O(#distinct shapes), the
+batched-group wrapper pads the group and child dims up to power-of-two
+buckets with zero-weight, zero-valued slots; appending exact float zeros
+to a weighted sum never changes the partial sums, so bucketing is
+bit-exact (asserted in tests/test_hotpath.py).  Wrappers also handle
+tile padding and pytree-level application as before.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,11 +37,50 @@ import numpy as np
 from . import fused_update as _fu
 from . import policy_update as _pu
 from . import quantize as _q
+from . import ref as _ref
 from . import tree_aggregate as _ta
+
+_VALID_MODES = ("auto", "pallas", "jnp")
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "auto")
+if _MODE not in _VALID_MODES:
+    raise ValueError(f"REPRO_KERNEL_MODE must be one of {_VALID_MODES}, got {_MODE!r}")
+
+
+def kernel_mode() -> str:
+    return _MODE
+
+
+def set_kernel_mode(mode: str) -> str:
+    """Select the kernel execution path; returns the previous mode."""
+    global _MODE
+    if mode not in _VALID_MODES:
+        raise ValueError(f"kernel mode must be one of {_VALID_MODES}, got {mode!r}")
+    prev, _MODE = _MODE, mode
+    return prev
+
+
+def _use_jnp() -> bool:
+    if _MODE == "jnp":
+        return True
+    if _MODE == "pallas":
+        return False
+    return jax.default_backend() != "tpu"
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def bucket_size(n: int) -> int:
+    """Next power of two >= n (>= 1): THE shape-bucket policy, shared by
+    the kernel wrappers here and the training engine (``fl/engine.py``
+    re-exports it) so the two sides can never desynchronize.  Padding
+    cost is bounded below 2x elements per axis, in exchange for O(log)
+    distinct compiled programs per dimension."""
+    return 1 << (max(1, int(n)) - 1).bit_length()
+
+
+_bucket = bucket_size  # internal alias used by the wrappers below
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int = 0):
@@ -32,15 +92,40 @@ def _pad_to(x: jax.Array, mult: int, axis: int = 0):
     return jnp.pad(x, widths), pad
 
 
+def _pad_axis_to(x, size: int, axis: int):
+    """Zero-pad one axis up to an absolute size (no-op when already there)."""
+    if x.shape[axis] == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, widths)
+
+
 def tree_aggregate(grads: jax.Array, weights: jax.Array) -> jax.Array:
     """(C, L) x (C,) -> (L,) f32 weighted sum (pads L to the tile size)."""
+    if _use_jnp():
+        c = _bucket(grads.shape[0])
+        g = _pad_axis_to(grads, c, 0)
+        w = _pad_axis_to(weights, c, 0)
+        return _ta.tree_aggregate_jnp(g, w)
     g, pad = _pad_to(grads, _ta.TILE, axis=1)
     out = _ta.tree_aggregate(g, weights, interpret=_interpret())
     return out[: grads.shape[1]]
 
 
 def tree_aggregate_groups(grads: jax.Array, weights: jax.Array) -> jax.Array:
-    """(G, C, L) x (G, C) -> (G, L): one tree level as G padded groups."""
+    """(G, C, L) x (G, C) -> (G, L): one tree level as G padded groups.
+
+    The compiled fallback buckets G and C to powers of two with
+    zero-weight phantom slots, so every level of every tree hits one of
+    O(log G * log C) compiled programs per L instead of one per exact
+    shape (the recompile gate in bench_hotpath).
+    """
+    if _use_jnp():
+        gb, cb = _bucket(grads.shape[0]), _bucket(grads.shape[1])
+        g = _pad_axis_to(_pad_axis_to(grads, gb, 0), cb, 1)
+        w = _pad_axis_to(_pad_axis_to(weights, gb, 0), cb, 1)
+        return _ta.tree_aggregate_groups_jnp(g, w)[: grads.shape[0]]
     g, pad = _pad_to(grads, _ta.TILE, axis=2)
     out = _ta.tree_aggregate_groups(g, weights, interpret=_interpret())
     return out[:, : grads.shape[2]]
@@ -78,6 +163,9 @@ def buffered_aggregate(updates: list, weights, staleness, *, alpha: float = 0.5)
     ``w_i / (1+s_i)^alpha`` folded into its weight vector; the weighted
     sum is normalized by the combined weight so a full uniform-staleness
     buffer at alpha's no-op point matches synchronous FedAvg exactly.
+    K rides the group wrapper's child-dim bucketing, so varying buffer
+    fills (adaptive K, churn-clamped applies) reuse one compiled program
+    per bucket.
 
     Returns (aggregate pytree, combined weights (K,) f32).
     """
@@ -105,8 +193,20 @@ def jain_fairness(x) -> float:
     return (s * s) / (v.size * q)
 
 
+@functools.partial(jax.jit)
+def _qsgd_quantize_jnp(x, rand):
+    return _ref.quantize_ref(x, rand)
+
+
+@functools.partial(jax.jit)
+def _qsgd_dequantize_jnp(q, scale):
+    return _ref.dequantize_ref(q, scale)
+
+
 def qsgd_quantize(x: jax.Array, rand: jax.Array):
     """(R, 256) -> (int8, scales); pads rows to the block size."""
+    if _use_jnp():
+        return _qsgd_quantize_jnp(x, rand)
     xp, pad = _pad_to(x, _q.ROWS_PER_BLOCK, axis=0)
     rp, _ = _pad_to(rand, _q.ROWS_PER_BLOCK, axis=0)
     q, s = _q.qsgd_quantize(xp, rp, interpret=_interpret())
@@ -115,14 +215,27 @@ def qsgd_quantize(x: jax.Array, rand: jax.Array):
 
 
 def qsgd_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    if _use_jnp():
+        return _qsgd_dequantize_jnp(q, scale)
     qp, pad = _pad_to(q, _q.ROWS_PER_BLOCK, axis=0)
     sp, _ = _pad_to(scale, _q.ROWS_PER_BLOCK, axis=0)
     out = _q.qsgd_dequantize(qp, sp, interpret=_interpret())
     return out[: q.shape[0]]
 
 
+@functools.partial(jax.jit, static_argnames=("tau", "alpha", "beta"))
+def _policy_update_jnp(pi, mask, cand, reward_sums, *, tau, alpha, beta):
+    return _ref.policy_update_ref(
+        pi, mask, cand, reward_sums, tau=tau, alpha=alpha, beta=beta
+    )
+
+
 def policy_update(pi, mask, cand, reward_sums, *, tau: int, alpha: float, beta: float):
     """(N,K) policies -> updated policies (pads N to the node block)."""
+    if _use_jnp():
+        return _policy_update_jnp(
+            pi, mask, cand, reward_sums, tau=tau, alpha=alpha, beta=beta
+        )
     N = pi.shape[0]
     pi_p, _ = _pad_to(pi, _pu.NODE_BLOCK, axis=0)
     # padded nodes get a valid uniform row to avoid 0/0
@@ -140,9 +253,37 @@ def policy_update(pi, mask, cand, reward_sums, *, tau: int, alpha: float, beta: 
     return out[:N]
 
 
-def fused_update(w, g, w0, *, lr: float, mu: float = 0.0, wd: float = 0.0):
-    """Flattened fused FedProx/SGD update (pads to the tile size)."""
+@functools.partial(jax.jit, static_argnames=("lr", "mu", "wd"))
+def _fused_update_jnp(w, g, w0, *, lr, mu, wd):
+    return _ref.fused_update_ref(w, g, w0, lr, mu, wd)
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("lr", "mu", "wd")
+)
+def _fused_update_jnp_donated(w, g, w0, *, lr, mu, wd):
+    # the parameter buffer is donated: like the Pallas kernel's VMEM
+    # read-modify-write, the fallback updates w in place instead of
+    # allocating a second full parameter vector
+    return _ref.fused_update_ref(w, g, w0, lr, mu, wd)
+
+
+def fused_update(
+    w, g, w0, *, lr: float, mu: float = 0.0, wd: float = 0.0, donate: bool = False
+):
+    """Flattened fused FedProx/SGD update (pads to the tile size).
+
+    ``donate=True`` (compiled-fallback path) donates ``w``'s buffer to
+    the update — the in-place read-modify-write a server update wants —
+    so the caller MUST NOT touch ``w`` afterwards (and ``w0`` must not
+    alias it; pass ``donate=False``, the default, for the reference
+    semantics where ``w`` stays valid).
+    """
     shape, dtype = w.shape, w.dtype
+    if _use_jnp():
+        fn = _fused_update_jnp_donated if donate else _fused_update_jnp
+        out = fn(jnp.ravel(w), jnp.ravel(g), jnp.ravel(w0), lr=lr, mu=mu, wd=wd)
+        return out.reshape(shape).astype(dtype)
     wf, _ = _pad_to(w.ravel(), _fu.TILE)
     gf, _ = _pad_to(g.ravel(), _fu.TILE)
     w0f, _ = _pad_to(w0.ravel(), _fu.TILE)
@@ -150,8 +291,8 @@ def fused_update(w, g, w0, *, lr: float, mu: float = 0.0, wd: float = 0.0):
     return out[: w.size].reshape(shape).astype(dtype)
 
 
-def fused_update_pytree(params, grads, round_start, *, lr, mu=0.0, wd=0.0):
+def fused_update_pytree(params, grads, round_start, *, lr, mu=0.0, wd=0.0, donate=False):
     return jax.tree.map(
-        lambda w, g, w0: fused_update(w, g, w0, lr=lr, mu=mu, wd=wd),
+        lambda w, g, w0: fused_update(w, g, w0, lr=lr, mu=mu, wd=wd, donate=donate),
         params, grads, round_start,
     )

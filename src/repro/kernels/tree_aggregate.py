@@ -79,6 +79,33 @@ def tree_aggregate(grads: jax.Array, weights: jax.Array, *, interpret: bool = Fa
     )(grads, w2)
 
 
+@functools.partial(jax.jit)
+def tree_aggregate_jnp(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """Compiled pure-jnp fallback for ``tree_aggregate`` (no Pallas).
+
+    Selected by ``ops.py`` whenever the Pallas path would run in
+    ``interpret=True`` (i.e. off-TPU): interpret mode executes the kernel
+    body per grid point at Python speed, which made every CPU aggregation
+    a hot spot.  Same contraction as ``ref.tree_aggregate_ref`` — the
+    oracle IS the fallback — jitted once per shape bucket.  No tile
+    padding needed: XLA handles arbitrary L.
+    """
+    return jnp.einsum(
+        "c,cl->l", weights.astype(jnp.float32), grads.astype(jnp.float32)
+    )
+
+
+@functools.partial(jax.jit)
+def tree_aggregate_groups_jnp(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """Compiled pure-jnp fallback for ``tree_aggregate_groups``:
+    (G, C, L) x (G, C) -> (G, L) batched weighted sums.  Zero-weight
+    padding slots (ragged groups, phantom groups, bucket padding) carry
+    zero grads as well, so they add exact float zeros to the contraction."""
+    return jnp.einsum(
+        "gc,gcl->gl", weights.astype(jnp.float32), grads.astype(jnp.float32)
+    )
+
+
 GROUP_BLOCK = 8  # groups per program: GB*C*TILE*4B <= 1 MB VMEM at C=32
 
 

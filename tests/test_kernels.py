@@ -1,5 +1,12 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode
-on CPU; TPU is the compile target)."""
+on CPU; TPU is the compile target).
+
+Since the hot-path PR, ``ops`` routes to compiled jnp fallbacks off-TPU
+(``kernel_mode() == "auto"``); the property tests below pin the mode per
+path so the Pallas interpret source keeps its coverage, and assert the
+two paths agree on arbitrary ragged/1-sample shapes.  Deterministic
+(no-hypothesis) parity coverage lives in tests/test_hotpath.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -97,3 +104,75 @@ def test_fused_update_sweep(shape, dtype):
         np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=1e-2, atol=1e-2
     )
     assert out.dtype == w.dtype
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 9), st.integers(1, 2100), st.integers(0, 999))
+def test_tree_aggregate_groups_mode_parity_property(G, C, L, seed):
+    """jnp fallback == Pallas interpret == oracle on arbitrary ragged
+    (G, C, L) — including C=1 (single-child groups) and tiny L."""
+    prev = ops.kernel_mode()
+    try:
+        key = jax.random.key(seed)
+        g = jax.random.normal(key, (G, C, L))
+        w = jax.random.uniform(jax.random.fold_in(key, 1), (G, C))
+        ops.set_kernel_mode("jnp")
+        out_jnp = np.asarray(ops.tree_aggregate_groups(g, w))
+        ops.set_kernel_mode("pallas")
+        out_pl = np.asarray(ops.tree_aggregate_groups(g, w))
+    finally:
+        ops.set_kernel_mode(prev)
+    expect = np.einsum("gc,gcl->gl", np.asarray(w), np.asarray(g))
+    np.testing.assert_allclose(out_jnp, out_pl, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out_jnp, expect, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 10), st.floats(0.0, 2.0), st.integers(0, 999))
+def test_buffered_aggregate_mode_parity_property(K, alpha, seed):
+    """Staleness-weighted apply parity across kernel modes on ragged
+    pytrees down to K=1 (a single buffered commit)."""
+    rng = np.random.default_rng(seed)
+    ups = [
+        {"a": rng.standard_normal((5, 2)).astype(np.float32),
+         "b": rng.standard_normal(9).astype(np.float32)}
+        for _ in range(K)
+    ]
+    w = list(rng.uniform(0.5, 3.0, K))
+    s = list(rng.integers(0, 6, K))
+    prev = ops.kernel_mode()
+    try:
+        ops.set_kernel_mode("jnp")
+        agg_j, cw_j = ops.buffered_aggregate(ups, w, s, alpha=alpha)
+        ops.set_kernel_mode("pallas")
+        agg_p, cw_p = ops.buffered_aggregate(ups, w, s, alpha=alpha)
+    finally:
+        ops.set_kernel_mode(prev)
+    for a, b in zip(jax.tree.leaves(agg_j), jax.tree.leaves(agg_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cw_j), np.asarray(cw_p), rtol=1e-6)
+    disc = np.asarray(w) * (1.0 + np.asarray(s, float)) ** -alpha
+    expect = (np.stack([np.concatenate([u["a"].ravel(), u["b"].ravel()]) for u in ups])
+              * disc[:, None]).sum(0) / disc.sum()
+    got = np.concatenate([np.asarray(l).ravel() for l in jax.tree.leaves(agg_j)])
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 5000), st.integers(0, 999))
+def test_fused_update_mode_parity_property(L, seed):
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (L,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (L,))
+    w0 = jax.random.normal(jax.random.fold_in(key, 2), (L,))
+    prev = ops.kernel_mode()
+    try:
+        ops.set_kernel_mode("jnp")
+        out_j = np.asarray(ops.fused_update(w, g, w0, lr=0.05, mu=0.1, wd=0.01))
+        ops.set_kernel_mode("pallas")
+        out_p = np.asarray(ops.fused_update(w, g, w0, lr=0.05, mu=0.1, wd=0.01))
+    finally:
+        ops.set_kernel_mode(prev)
+    expect = np.asarray(ref.fused_update_ref(w, g, w0, 0.05, 0.1, 0.01))
+    np.testing.assert_allclose(out_j, expect, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out_p, expect, rtol=1e-5, atol=1e-5)
