@@ -1,0 +1,350 @@
+"""Million-node scale bench: O(log N) routing + cohort-batched events.
+
+The paper's headline scalability claim is O(log N) hops "with millions
+of nodes" (§VI, Fig. 5-6 at smaller N).  This bench measures it
+directly against the vectorized scale layer (docs/performance.md
+"scale layer"):
+
+- **hops vs N** for N in {1e3, 1e4, 1e5, 1e6} (smoke: up to 1e5): each
+  overlay is bulk-built with ``join_many`` and a fixed sample of routes
+  is resolved through the batched ``route_many``; mean delivered hops
+  are least-squares fit to ``hops = a + c*log2(N)`` and the fit must
+  explain the curve (R^2 >= 0.95).  A random sub-sample of every batch
+  is replayed through the scalar object-API ``route`` (the oracle) and
+  must match hop-for-hop.
+- **events/s + peak RSS vs M** for M in {4, 16, 64, 256} (smoke: up to
+  64): pure timing-model runs (no trainer) of the cohort-batched
+  scheduler in sampled-congestion mode — the configuration that holds
+  the heap at O(apps + uplinks).  Peak RSS is ``resource.getrusage``'s
+  high-water mark, so the sweep runs small M -> large M and each row
+  reports the peak *up to and including* that M.
+- **M=16 exactness anchor**: the cohort-batched core in exact mode must
+  produce a byte-identical event trace (ApplyEvent/ChurnRecord
+  dataclass equality, exact float timestamps) to the per-event
+  baseline, and ``congestion_mode="sampled"`` with ``hot_threshold=0``
+  must degenerate to the exact trace.
+
+Gates (CI fails on regression): log-fit R^2 >= 0.95, zero oracle
+mismatches, both trace-identity checks.  ``--max-events`` threads the
+event budget through for longer runs (the budget error names it).
+
+``python -m benchmarks.bench_scale --smoke`` writes BENCH_scale.json
+(the CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import resource
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.common import build_system, row
+
+FULL_NS = (1_000, 10_000, 100_000, 1_000_000)
+SMOKE_NS = (1_000, 10_000, 100_000)
+FULL_MS = (4, 16, 64, 256)
+SMOKE_MS = (4, 16, 64)
+
+
+def _peak_rss_mb() -> float:
+    """ru_maxrss is KiB on Linux, bytes on macOS."""
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        peak /= 1024
+    return peak / 1024.0
+
+
+# -- hops vs N (route_many against the scalar oracle) -------------------------
+
+
+def route_scaling(ns, *, zones=8, routes=2000, parity_sample=50, seed=0) -> list[dict]:
+    from repro.core.nodeid import IdSpace
+    from repro.core.overlay import MultiRingOverlay
+
+    out = []
+    for n in ns:
+        space = IdSpace(zone_bits=int(math.log2(zones)), suffix_bits=28)
+        ov = MultiRingOverlay(space, base_bits=4, seed=seed)
+        rng = np.random.default_rng(seed + n)
+        t0 = time.perf_counter()
+        ids = ov.join_many(
+            rng.integers(0, zones, n), coords=rng.uniform(0, 1000, (n, 2))
+        )
+        build_s = time.perf_counter() - t0
+        srcs = ids[rng.integers(0, n, routes)]
+        keys = rng.integers(0, 1 << space.total_bits, routes)
+        t0 = time.perf_counter()
+        batch = ov.route_many(srcs, keys)
+        route_s = time.perf_counter() - t0
+        mismatches = 0
+        for k in rng.integers(0, routes, parity_sample):
+            k = int(k)
+            res = ov.route(int(srcs[k]), int(keys[k]))
+            if (
+                res.path != batch.path(k)
+                or res.hops != int(batch.hops[k])
+                or res.blocked != bool(batch.blocked[k])
+            ):
+                mismatches += 1
+        delivered = ~batch.blocked
+        out.append(
+            {
+                "n": int(n),
+                "mean_hops": float(batch.hops[delivered].mean()),
+                "max_hops": int(batch.hops[delivered].max()),
+                "routes": int(routes),
+                "build_s": build_s,
+                "routes_per_sec": routes / max(route_s, 1e-9),
+                "oracle_mismatches": mismatches,
+                "peak_rss_mb": _peak_rss_mb(),
+            }
+        )
+    return out
+
+
+def log_fit(curve: list[dict]) -> dict:
+    """Least-squares hops = a + c*log2(N); returns slope, intercept, R^2."""
+    x = np.log2([r["n"] for r in curve])
+    y = np.array([r["mean_hops"] for r in curve])
+    c, a = np.polyfit(x, y, 1)
+    pred = a + c * x
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum())
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+    return {"slope_per_log2n": float(c), "intercept": float(a), "r2": float(r2)}
+
+
+# -- events/s + RSS vs M (cohort-batched timing model) ------------------------
+
+
+def _make_handles(sys_, nodes, rng, m, w, tag=""):
+    """Timing-model app handles: trees + subscriptions, no jax models."""
+    handles = []
+    for a in range(m):
+        h = sys_.CreateTree(f"scale{tag}-{m}-{a}")
+        for node in rng.choice(nodes, size=w, replace=False):
+            sys_.Subscribe(h.app_id, int(node))
+        handles.append(h)
+    return handles
+
+
+def _timing_run(m_apps, *, cohort, congestion_mode, hot_threshold=4, workers=8,
+                applies=2, seed=0, base_ms=40.0, spread=6.0, model_bytes=2e5,
+                n_nodes=600, zones=4, max_events=1_000_000) -> dict:
+    from repro.core.sim import AsyncBufferScheduler, ChurnModel
+    from repro.fl import async_engine
+
+    per_worker = async_engine.worker_compute_fn(base_ms, spread, seed=seed)
+    sys_a, nodes_a, rng_a = build_system(n_nodes=n_nodes, zones=zones, seed=seed)
+    handles = _make_handles(sys_a, nodes_a, rng_a, m_apps, workers, tag="s")
+    churn = ChurnModel(
+        period_ms=6.0 * base_ms, downtime_ms=12.0 * base_ms,
+        group_size=max(1, round(0.1 * workers)), seed=seed,
+    )
+    sched = AsyncBufferScheduler(
+        sys_a, handles, model_bytes=model_bytes, compute_ms=per_worker,
+        buffer_k=max(2, workers // 2), churn=churn, cohort=cohort,
+        congestion_mode=congestion_mode, hot_threshold=hot_threshold,
+    )
+    t0 = time.perf_counter()
+    events = sched.run(applies, max_events=max_events)
+    wall = time.perf_counter() - t0
+    return {
+        "events": events,
+        "churn": list(sched.churn_log),
+        "wall_s": wall,
+        "events_dispatched": sched.events_dispatched,
+        "events_per_sec": sched.events_dispatched / max(wall, 1e-9),
+        "heap_max": sched.heap_max,
+    }
+
+
+def event_scaling(ms, *, applies=2, seed=0, max_events=1_000_000) -> list[dict]:
+    """Sweep M small -> large (getrusage is a high-water mark)."""
+    out = []
+    for m in ms:
+        r = _timing_run(
+            m, cohort=True, congestion_mode="sampled", applies=applies,
+            seed=seed, max_events=max_events,
+        )
+        out.append(
+            {
+                "m": int(m),
+                "applies_completed": len(r["events"]),
+                "events_dispatched": r["events_dispatched"],
+                "events_per_sec": r["events_per_sec"],
+                "heap_max": r["heap_max"],
+                "wall_s": r["wall_s"],
+                "peak_rss_mb": _peak_rss_mb(),
+            }
+        )
+    return out
+
+
+def trace_identity(*, m_apps=16, applies=3, seed=0, max_events=1_000_000) -> dict:
+    """The exactness anchor: cohort/exact and sampled(ht=0) vs baseline."""
+    kw = dict(applies=applies, seed=seed, max_events=max_events)
+    base = _timing_run(m_apps, cohort=False, congestion_mode="exact", **kw)
+    coh = _timing_run(m_apps, cohort=True, congestion_mode="exact", **kw)
+    deg = _timing_run(
+        m_apps, cohort=True, congestion_mode="sampled", hot_threshold=0, **kw
+    )
+    return {
+        "m": int(m_apps),
+        "cohort_identical": base["events"] == coh["events"]
+        and base["churn"] == coh["churn"],
+        "sampled_ht0_identical": base["events"] == deg["events"]
+        and base["churn"] == deg["churn"],
+        "events_dispatched_baseline": base["events_dispatched"],
+        "events_dispatched_cohort": coh["events_dispatched"],
+        "heap_max_baseline": base["heap_max"],
+        "heap_max_cohort": coh["heap_max"],
+    }
+
+
+# -- gates / drivers ----------------------------------------------------------
+
+
+def gate(payload: dict, *, min_r2: float = 0.95) -> list[str]:
+    """The acceptance gates; returns failure messages (empty = pass)."""
+    fails = []
+    fit = payload["hops_fit"]
+    if fit["r2"] < min_r2:
+        fails.append(
+            f"hops-vs-N log fit R^2 {fit['r2']:.4f} below the {min_r2} gate"
+        )
+    for r in payload["hops_vs_n"]:
+        if r["oracle_mismatches"]:
+            fails.append(
+                f"N={r['n']}: {r['oracle_mismatches']} route_many results "
+                "diverge from the scalar oracle"
+            )
+    tid = payload["trace_identity"]
+    if not tid["cohort_identical"]:
+        fails.append("M=16 cohort trace diverges from the per-event baseline")
+    if not tid["sampled_ht0_identical"]:
+        fails.append("M=16 sampled(hot_threshold=0) trace diverges from exact")
+    for r in payload["events_vs_m"]:
+        want = r["m"] * payload["applies_per_app"]
+        if r["applies_completed"] < want:
+            fails.append(
+                f"M={r['m']}: only {r['applies_completed']}/{want} applies completed"
+            )
+    return fails
+
+
+def bench(*, smoke: bool, max_events: int, seed: int = 0) -> dict:
+    ns = SMOKE_NS if smoke else FULL_NS
+    ms = SMOKE_MS if smoke else FULL_MS
+    applies = 2
+    curve = route_scaling(ns, seed=seed)
+    fit = log_fit(curve)
+    tid = trace_identity(seed=seed, max_events=max_events)
+    sweep = event_scaling(ms, applies=applies, seed=seed, max_events=max_events)
+    return {
+        "bench": "scale_vectorized_overlay_cohort_events",
+        "smoke": bool(smoke),
+        "applies_per_app": applies,
+        "hops_vs_n": curve,
+        "hops_fit": fit,
+        "trace_identity": tid,
+        "events_vs_m": sweep,
+    }
+
+
+def run() -> list[str]:
+    """Registry entry (python -m benchmarks.run): smoke-sized."""
+    payload = bench(smoke=True, max_events=1_000_000)
+    out = []
+    for r in payload["hops_vs_n"]:
+        out.append(
+            row(
+                f"scale_route_n{r['n']}",
+                1e6 / max(r["routes_per_sec"], 1e-9),
+                f"mean_hops={r['mean_hops']:.2f};"
+                f"oracle_mismatches={r['oracle_mismatches']}",
+            )
+        )
+    fit = payload["hops_fit"]
+    tid = payload["trace_identity"]
+    for r in payload["events_vs_m"]:
+        out.append(
+            row(
+                f"scale_events_m{r['m']}",
+                r["wall_s"] * 1e6,
+                f"events_per_sec={r['events_per_sec']:.0f};"
+                f"heap_max={r['heap_max']};peak_rss_mb={r['peak_rss_mb']:.0f}",
+            )
+        )
+    out.append(
+        row(
+            "scale_gates",
+            0.0,
+            f"fit_r2={fit['r2']:.4f};slope={fit['slope_per_log2n']:.3f};"
+            f"cohort_identical={tid['cohort_identical']};"
+            f"sampled_ht0_identical={tid['sampled_ht0_identical']}",
+        )
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--smoke", action="store_true",
+                    help="N <= 1e5, M <= 64 (CI tier); same gates")
+    ap.add_argument("--out", default="BENCH_scale.json")
+    ap.add_argument("--max-events", type=int, default=1_000_000,
+                    help="event budget per scheduler run (threaded through)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    payload = bench(smoke=args.smoke, max_events=args.max_events, seed=args.seed)
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, allow_nan=False)
+
+    for r in payload["hops_vs_n"]:
+        print(
+            f"N={r['n']:>9,}: mean hops {r['mean_hops']:.2f} (max {r['max_hops']}), "
+            f"build {r['build_s']:.2f}s, {r['routes_per_sec']:.0f} routes/s, "
+            f"oracle mismatches {r['oracle_mismatches']}, "
+            f"peak RSS {r['peak_rss_mb']:.0f} MB"
+        )
+    fit = payload["hops_fit"]
+    print(
+        f"log fit: hops = {fit['intercept']:.2f} + "
+        f"{fit['slope_per_log2n']:.3f}*log2(N), R^2 = {fit['r2']:.4f}"
+    )
+    tid = payload["trace_identity"]
+    print(
+        f"M={tid['m']} trace identity: cohort == baseline: "
+        f"{tid['cohort_identical']}; sampled(ht=0) == exact: "
+        f"{tid['sampled_ht0_identical']}; heap max "
+        f"{tid['heap_max_baseline']} -> {tid['heap_max_cohort']}"
+    )
+    for r in payload["events_vs_m"]:
+        print(
+            f"M={r['m']:>4}: {r['events_per_sec']:.0f} events/s, "
+            f"{r['applies_completed']} applies, heap max {r['heap_max']}, "
+            f"wall {r['wall_s']:.2f}s, peak RSS {r['peak_rss_mb']:.0f} MB"
+        )
+    fails = gate(payload)
+    print(f"wrote {out_path}")
+    for msg in fails:
+        print(f"GATE FAIL: {msg}")
+    if fails:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

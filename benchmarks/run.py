@@ -28,6 +28,8 @@ REGISTRY: list[tuple[str, str, str]] = [
      "multi-app uplink fairness: weighted-fair re-pricing vs legacy start-time pricing, Jain's index at M in {4,16,64}"),
     ("hotpath(perf)", "benchmarks.bench_hotpath",
      "simulator hot paths: megabatched dispatch + compiled kernel fallback + incremental repricing vs the pre-optimization engine (>=3x gate, byte-identical traces)"),
+    ("scale(perf)", "benchmarks.bench_scale",
+     "million-node scale layer: route_many hops vs N log-fit (R^2 gate), cohort-batched events/s + peak RSS vs M, M=16 trace-identity anchor"),
     ("scalability(Fig5)", "benchmarks.bench_scalability",
      "overlay join/route cost vs network size"),
     ("hops(Fig6)", "benchmarks.bench_hops",

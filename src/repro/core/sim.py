@@ -255,6 +255,12 @@ class EventCore:
         # completion event per uplink (instead of one event per flow)
         self._uplink_state: dict[int, UplinkState] = {}
         self._uplink_ev: dict[int, int] = {}
+        # cohort batching: events sharing a cohort id keep their own
+        # (t, seq) completion-time heap; only each cohort's earliest
+        # member occupies the global heap (see schedule_cohort)
+        self._cohorts: dict = {}  # cohort id -> [(t, seq), ...] heap
+        self._cohort_of: dict[int, object] = {}  # member seq -> cohort id
+        self._armed: dict[int, object] = {}  # seq in global heap -> cohort id
 
     def _reset_clock(self) -> None:
         self.now = 0.0
@@ -270,6 +276,9 @@ class EventCore:
         self._flow_seq = 0
         self._uplink_state.clear()
         self._uplink_ev.clear()
+        self._cohorts.clear()
+        self._cohort_of.clear()
+        self._armed.clear()
 
     def sender_indices(self, nodes) -> np.ndarray:
         return np.asarray([self._node_idx[n] for n in nodes], np.int32)
@@ -314,6 +323,49 @@ class EventCore:
             self.heap_max = len(self._heap)  # telemetry: peak incl. dead entries
         return seq
 
+    def schedule_cohort(self, cohort, delay_ms: float, callback: Callable,
+                        senders: np.ndarray | None = None) -> int:
+        """Like ``schedule``, but events sharing ``cohort`` (any hashable
+        id — the async scheduler passes the app index) share ONE global
+        heap entry: the cohort keeps its own (t, seq) completion-time
+        heap, and only its earliest member is "armed" into the global
+        heap.  When that member pops, the next one is armed.  Because a
+        member always enters the global heap carrying its original
+        (t, seq) — and every unarmed member of its cohort sorts after
+        it — the dispatch order is exactly the per-event baseline's
+        (the M=16 trace-identity gate in tests/test_scale.py), while the
+        heap holds O(cohorts) entries instead of O(workers)."""
+        seq = self._seq
+        self._seq += 1
+        if senders is not None and len(senders):
+            self._active[seq] = senders
+        self._callbacks[seq] = callback
+        h = self._cohorts.setdefault(cohort, [])
+        heapq.heappush(h, (self.now + delay_ms, seq))
+        self._cohort_of[seq] = cohort
+        self._arm_cohort(cohort)
+        return seq
+
+    def _arm_cohort(self, cohort) -> None:
+        """Push the cohort's earliest live, not-yet-armed member into the
+        global heap (no-op if the head is already armed)."""
+        h = self._cohorts.get(cohort)
+        while h:
+            t, seq = h[0]
+            if seq in self._armed:
+                return  # head already in the global heap
+            if self._callbacks.get(seq) is None:
+                heapq.heappop(h)  # cancelled before ever arming: drop
+                self._callbacks.pop(seq, None)
+                self._cohort_of.pop(seq, None)
+                continue
+            self._armed[seq] = cohort
+            heapq.heappush(self._heap, (t, seq))
+            if len(self._heap) > self.heap_max:
+                self.heap_max = len(self._heap)
+            return
+        self._cohorts.pop(cohort, None)
+
     def cancel(self, seq: int) -> None:
         """Void a pending event (its flows stop contending immediately).
         Safe on an already-fired seq (the fair path re-cancels the last
@@ -323,7 +375,14 @@ class EventCore:
         counted: once dead entries outnumber live ones the heap is
         compacted, so churn- and reprice-cancelled events can no longer
         bloat ``run_events`` for the rest of a run (regression:
-        tests/test_hotpath.py)."""
+        tests/test_hotpath.py).  An unarmed cohort member occupies no
+        global heap entry; it is only marked dead and dropped lazily
+        when it reaches its cohort's head."""
+        if seq in self._cohort_of and seq not in self._armed:
+            if self._callbacks.get(seq) is not None:
+                self._callbacks[seq] = None
+            self._active.pop(seq, None)
+            return
         if self._callbacks.get(seq) is not None:
             self._callbacks[seq] = None
             self._dead += 1
@@ -339,7 +398,18 @@ class EventCore:
         for seq in [s for s, cb in cbs.items() if cb is None]:
             del cbs[seq]
             self._active.pop(seq, None)
+            self._cohort_of.pop(seq, None)
         self._dead = 0
+        # compaction may have evicted dead ARMED cohort members from the
+        # global heap — their cohorts must be re-armed or they stall
+        in_heap = {s for _, s in self._heap}
+        stale = [s for s in self._armed if s not in in_heap]
+        for seq in stale:
+            cohort = self._armed.pop(seq)
+            h = self._cohorts.get(cohort)
+            if h and h[0][1] == seq:
+                heapq.heappop(h)
+            self._arm_cohort(cohort)
 
     # -- fluid fair-share flows (weighted-fair transfer pricing) ---------------
 
@@ -489,6 +559,11 @@ class EventCore:
         """Hook: a flow left ``sender``'s uplink.  The async scheduler
         overrides this to resume relay-deferred commits."""
 
+    def _progress_summary(self) -> str:
+        """Hook: one-line per-app progress for the budget-exhausted
+        diagnostic.  Schedulers override this with real progress."""
+        return ""
+
     def run_events(self, *, max_events: int = 1_000_000, stop: Callable[[], bool] | None = None) -> None:
         """Drain the heap in clock order, dispatching callbacks."""
         n = 0
@@ -496,6 +571,15 @@ class EventCore:
             if stop is not None and stop():
                 return
             t, seq = heapq.heappop(self._heap)
+            cohort = self._armed.pop(seq, None)
+            if cohort is not None:
+                # this member was its cohort's head: retire it and arm
+                # the next earliest (which sorts at or after (t, seq))
+                self._cohort_of.pop(seq, None)
+                h = self._cohorts.get(cohort)
+                if h and h[0][1] == seq:
+                    heapq.heappop(h)
+                self._arm_cohort(cohort)
             self._active.pop(seq, None)
             cb = self._callbacks.pop(seq, None)
             if cb is None:
@@ -507,7 +591,20 @@ class EventCore:
             n += 1
             self.events_dispatched += 1
             if n >= max_events:
-                raise RuntimeError(f"event budget exhausted ({max_events})")
+                live = len(self._heap) - self._dead
+                msg = (
+                    f"event budget exhausted ({max_events} events dispatched): "
+                    f"clock={self.now:.1f}ms, heap={max(live, 0)} live"
+                    f"/{self._dead} dead entries"
+                )
+                prog = self._progress_summary()
+                if prog:
+                    msg += f"; {prog}"
+                msg += (
+                    " — raise max_events (threaded through run()/run_async"
+                    "/bench entry points) for longer runs"
+                )
+                raise RuntimeError(msg)
 
 
 class SyncRoundScheduler(EventCore):
@@ -833,6 +930,23 @@ class AsyncBufferScheduler(EventCore):
       re-offered at their app's next apply.  A liveness guard force-
       admits when fewer than K workers are in flight, so selection can
       never deadlock the buffer.
+
+    Scale layer (docs/performance.md "scale layer"):
+
+    - ``cohort=True`` (default) batches per-worker cycle events into one
+      global heap entry per app cohort (``EventCore.schedule_cohort``):
+      the heap holds O(apps + uplinks) entries instead of O(workers),
+      and the dispatch order — hence the ApplyEvent/ChurnRecord trace —
+      is byte-identical to the per-event baseline (``cohort=False``).
+    - ``congestion_mode="exact"`` (default) prices every transfer leg
+      through the fluid fair-share engine.  ``"sampled"`` prices COLD
+      cycles statistically: the whole download+compute+upload cycle is
+      priced once at start against the current uplink loads and runs as
+      a single cohort event, while any cycle whose path crosses a hot
+      uplink (>= ``hot_threshold`` concurrent flows + cold cycles) still
+      runs exact leg-by-leg.  ``hot_threshold=0`` therefore degenerates
+      sampled mode to exact mode (a tested invariant).  Cold cycles skip
+      relay admission (their hops never individually materialize).
     """
 
     def __init__(
@@ -855,11 +969,21 @@ class AsyncBufferScheduler(EventCore):
         app_rate_caps: float | list[float] | None = None,
         relay_admission: RelayAdmission | None = None,
         incremental: bool = True,
+        cohort: bool = True,
+        congestion_mode: str = "exact",
+        hot_threshold: int = 4,
     ):
         super().__init__(
             system, handles, model_bytes=model_bytes, base_ms=base_ms,
             incremental=incremental,
         )
+        if congestion_mode not in ("exact", "sampled"):
+            raise ValueError(
+                f"congestion_mode must be 'exact' or 'sampled', got {congestion_mode!r}"
+            )
+        self.cohort = bool(cohort)
+        self.congestion_mode = congestion_mode
+        self.hot_threshold = int(hot_threshold)
         self.compute_ms = compute_ms
         self.trainer = trainer
         self.barrier = barrier
@@ -911,6 +1035,10 @@ class AsyncBufferScheduler(EventCore):
         self._deferred: dict[int, list[dict]] = {}  # relay -> FIFO of records
         self._deferred_by_key: dict[tuple[int, int], dict] = {}
         self._path_cache: dict[tuple[int, int, bool], np.ndarray] = {}
+        # sampled-congestion state: cold cycles occupy their uplinks
+        # statistically (a load counter) instead of as fluid flows
+        self._cold_load = np.zeros(len(self._cap_f32), np.int64)
+        self._cold_hops: dict[tuple[int, int], np.ndarray] = {}
 
     def _per_app(self, value, handle_attr: str, default):
         """Resolve a per-app knob: explicit arg (scalar broadcast or
@@ -963,6 +1091,73 @@ class AsyncBufferScheduler(EventCore):
             self._path_cache[key] = cached
         return cached
 
+    def _sched_worker(self, ai: int, delay_ms: float, callback: Callable,
+                      senders: np.ndarray | None = None) -> int:
+        """Schedule one per-worker cycle event — cohort-batched per app
+        when ``cohort`` is on, a plain heap entry otherwise."""
+        if self.cohort:
+            return self.schedule_cohort(ai, delay_ms, callback, senders)
+        return self.schedule(delay_ms, callback, senders)
+
+    # -- sampled/statistical congestion (cold-path cycles) ---------------------
+
+    def _uplink_load(self, sender: int) -> int:
+        """Concurrent occupancy of one uplink: fluid flows + cold cycles."""
+        return len(self._flows_by_sender.get(int(sender), ())) + int(
+            self._cold_load[int(sender)]
+        )
+
+    def _is_hot(self, hops: np.ndarray) -> bool:
+        if self.hot_threshold <= 0:
+            return True
+        return any(self._uplink_load(int(s)) >= self.hot_threshold for s in hops)
+
+    def _sampled_leg_ms(self, senders: np.ndarray) -> float:
+        """Statistical store-and-forward price of one leg: each hop at its
+        *current* load (fluid flows + cold cycles + this one), frozen for
+        the cycle's whole duration.  Same f32 arithmetic as the legacy
+        ``transfer_ms`` pricing, with the cold-cycle load folded in."""
+        if len(senders) == 0:
+            return 0.0
+        own = np.asarray(senders)
+        counts = np.asarray(
+            [1 + self._uplink_load(int(s)) for s in own], np.float32
+        )
+        rate = self._cap_f32[own] / np.maximum(counts, np.float32(1.0))
+        lat = np.float32(self.base_ms) + np.float32(
+            1e3 * self.env.packet_mbit
+        ) / np.maximum(rate, np.float32(1e-6))
+        return float(lat.sum())
+
+    def _start_cycle_cold(self, ai: int, w: int, delay: float) -> None:
+        """Sampled-mode cold path: price the whole cycle now, occupy its
+        uplinks statistically, and complete in ONE cohort event."""
+        key = (ai, w)
+        down = self._path_senders(ai, w, up=False)
+        up = self._path_senders(ai, w, up=True)
+        cyc = self._cycle.get(key, 0)
+        if callable(self.compute_ms):
+            comp = float(self.compute_ms(self.handles[ai], w, cyc))
+        else:
+            comp = float(self.compute_ms)
+        dur = delay + self._sampled_leg_ms(down) + comp + self._sampled_leg_ms(up)
+        hops = np.concatenate([down, up]).astype(np.int64)
+        if len(hops):
+            np.add.at(self._cold_load, hops, 1)
+            self._cold_hops[key] = hops
+        self._pending_ev[key] = self._sched_worker(
+            ai, dur, lambda t, ai=ai, w=w: self._finish_cold_cycle(ai, w, t)
+        )
+
+    def _release_cold(self, key: tuple[int, int]) -> None:
+        hops = self._cold_hops.pop(key, None)
+        if hops is not None:
+            np.subtract.at(self._cold_load, hops, 1)
+
+    def _finish_cold_cycle(self, ai: int, w: int, t: float) -> None:
+        self._release_cold((ai, w))
+        self._on_uploaded(ai, w, t)
+
     def _offer_cycle(self, ai: int, w: int) -> None:
         """Gate a worker's next cycle through the selector (if any).
 
@@ -1006,6 +1201,11 @@ class AsyncBufferScheduler(EventCore):
         if self.trainer is not None:
             self.trainer.begin_download(ai, w)
         senders = self._path_senders(ai, w, up=False)
+        if self.congestion_mode == "sampled" and not (
+            self._is_hot(senders) or self._is_hot(self._path_senders(ai, w, up=True))
+        ):
+            self._start_cycle_cold(ai, w, delay)
+            return
         if self.fair:
             self._begin_leg(
                 ai, w, senders, delay, commit=False,
@@ -1013,8 +1213,8 @@ class AsyncBufferScheduler(EventCore):
             )
             return
         dur = delay + self.transfer_ms(senders, reduce="sum")
-        self._pending_ev[key] = self.schedule(
-            dur, lambda t, ai=ai, w=w: self._on_downloaded(ai, w, t), senders
+        self._pending_ev[key] = self._sched_worker(
+            ai, dur, lambda t, ai=ai, w=w: self._on_downloaded(ai, w, t), senders
         )
 
     def _on_downloaded(self, ai: int, w: int, t: float) -> None:
@@ -1025,8 +1225,8 @@ class AsyncBufferScheduler(EventCore):
             dur = float(self.compute_ms(self.handles[ai], w, cyc))
         else:
             dur = float(self.compute_ms)
-        self._pending_ev[(ai, w)] = self.schedule(
-            dur, lambda t, ai=ai, w=w: self._on_computed(ai, w, t)
+        self._pending_ev[(ai, w)] = self._sched_worker(
+            ai, dur, lambda t, ai=ai, w=w: self._on_computed(ai, w, t)
         )
 
     def _on_computed(self, ai: int, w: int, t: float) -> None:
@@ -1040,8 +1240,8 @@ class AsyncBufferScheduler(EventCore):
             )
             return
         dur = self.transfer_ms(senders, reduce="sum")
-        self._pending_ev[(ai, w)] = self.schedule(
-            dur, lambda t, ai=ai, w=w: self._on_uploaded(ai, w, t), senders
+        self._pending_ev[(ai, w)] = self._sched_worker(
+            ai, dur, lambda t, ai=ai, w=w: self._on_uploaded(ai, w, t), senders
         )
 
     # -- fair-share leg execution (hop-by-hop fluid flows) ---------------------
@@ -1058,7 +1258,7 @@ class AsyncBufferScheduler(EventCore):
         key = (ai, w)
         hops = [int(s) for s in senders]
         if not hops:
-            self._pending_ev[key] = self.schedule(delay, lambda t: done(t))
+            self._pending_ev[key] = self._sched_worker(ai, delay, lambda t: done(t))
             return
 
         def start_hop(j: int, extra: float) -> None:
@@ -1076,8 +1276,8 @@ class AsyncBufferScheduler(EventCore):
         def launch_hop(j: int, extra: float) -> None:
             if self._done[ai] or w in self._failed:
                 return
-            self._pending_ev[key] = self.schedule(
-                self.base_ms + extra,
+            self._pending_ev[key] = self._sched_worker(
+                ai, self.base_ms + extra,
                 lambda t, j=j, relay=hops[j]: open_hop(j, relay),
             )
 
@@ -1326,6 +1526,7 @@ class AsyncBufferScheduler(EventCore):
                     fid = self._pending_flow.pop(key, None)
                     if fid is not None:
                         self.cancel_flow(fid)
+                    self._release_cold(key)
                     self._drop_deferred(key)
                     self._version_at_start.pop(key, None)
                     self._cycle_start.pop(key, None)
@@ -1402,6 +1603,20 @@ class AsyncBufferScheduler(EventCore):
 
     # -- driver ----------------------------------------------------------------
 
+    def _progress_summary(self) -> str:
+        """Per-app progress for the budget-exhaustion diagnostic."""
+        target = getattr(self, "_applies_target", None)
+        if target is None or not self._version:
+            return ""
+        done = sum(1 for d in self._done if d)
+        lagging = ", ".join(
+            f"app{ai}={v}/{target}"
+            for ai, v in enumerate(self._version)
+            if not self._done[ai]
+        )
+        head = f"apps done {done}/{len(self._done)}"
+        return head + (f" (pending: {lagging})" if lagging else "")
+
     def run(
         self,
         applies: int = 1,
@@ -1424,6 +1639,8 @@ class AsyncBufferScheduler(EventCore):
         self._version_at_start.clear()
         self._pending_ev.clear()
         self._pending_flow.clear()
+        self._cold_load[:] = 0
+        self._cold_hops.clear()
         self._delay_until.clear()
         self._cycle_start.clear()
         self._parked = [set() for _ in range(n)]

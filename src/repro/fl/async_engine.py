@@ -213,6 +213,10 @@ def run_async(
     relay_admission=None,
     megabatch: bool = True,
     incremental: bool = True,
+    cohort: bool = True,
+    congestion_mode: str = "exact",
+    hot_threshold: int = 4,
+    max_events: int = 1_000_000,
 ) -> dict:
     """Wire an ``AsyncTrainer`` under an ``AsyncBufferScheduler`` and run
     every app to ``applies`` buffered updates.  Returns the scheduler
@@ -231,7 +235,13 @@ def run_async(
     False for the legacy start-time-only pricing), ``app_weights`` /
     ``app_rate_caps`` bias or bound per-app uplink shares, and
     ``relay_admission`` (a ``core.sim.RelayAdmission``) defers stale
-    commits at contended relays."""
+    commits at contended relays.
+
+    Scale knobs (docs/performance.md "scale layer"): ``cohort`` batches
+    per-worker events into one heap entry per app (trace-identical,
+    default on); ``congestion_mode="sampled"`` prices cold cycles
+    statistically with ``hot_threshold`` selecting which uplinks stay
+    exact; ``max_events`` raises the event budget for large scale runs."""
     from repro.core.sim import AsyncBufferScheduler
 
     trainer = AsyncTrainer(
@@ -256,8 +266,11 @@ def run_async(
         app_rate_caps=app_rate_caps,
         relay_admission=relay_admission,
         incremental=incremental,
+        cohort=cohort,
+        congestion_mode=congestion_mode,
+        hot_threshold=hot_threshold,
     )
-    events = sched.run(applies)
+    events = sched.run(applies, max_events=max_events)
     return {
         "events": events,
         "churn": list(sched.churn_log),

@@ -29,6 +29,7 @@ import cProfile
 import io
 import os
 import pstats
+import resource
 import sys
 import time
 
@@ -115,6 +116,14 @@ def main() -> None:
     print(buf.getvalue())
     print(f"wall-clock: {wall:.2f}s; applies completed: {len(res['events'])}; "
           f"churn events: {len(res['churn'])}")
+    # scale-layer counters (docs/performance.md "scale layer"): event
+    # throughput and the process peak-RSS high-water mark
+    sched = res["scheduler"]
+    peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    peak_mb = peak_kb / 1024.0 if sys.platform != "darwin" else peak_kb / 2**20
+    print(f"events dispatched: {sched.events_dispatched} "
+          f"({sched.events_dispatched / max(wall, 1e-9):.0f} events/s wall, "
+          f"heap max {sched.heap_max}); peak RSS: {peak_mb:.0f} MB")
     print(f"wrote {stats_path}")
     if not args.no_jax_trace:
         print(f"wrote jax trace under {trace_dir} (open with Perfetto or "
