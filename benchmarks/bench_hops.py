@@ -12,10 +12,11 @@ def run() -> list[str]:
     # (a, b): time vs exponentially growing node count — expect ~linear
     # (depth = O(log N)); we report modeled tree latency + measured hops
     for n in (20, 80, 320, 1280, 5120):
-        sys_, nodes, rng = build_system(n_nodes=max(n, 64), zones=4, seed=1)
+        sys_, nodes, rng = build_system(n_nodes=max(n, 64), zones=4, seed=1, bulk=True)
         h = sys_.CreateTree(f"bench-{n}")
-        for w in rng.choice(nodes, size=min(n, len(nodes)), replace=False):
-            sys_.Subscribe(h.app_id, int(w))
+        sys_.SubscribeMany(
+            h.app_id, rng.choice(nodes, size=min(n, len(nodes)), replace=False)
+        )
         tree = h.tree
         bt = tree.broadcast_time(sys_.overlay)
         at = tree.aggregation_time(sys_.overlay)
@@ -29,10 +30,9 @@ def run() -> list[str]:
 
     # (c, d): fanout sweep (ResNet-34-sized payload, 85 MB)
     for b in (3, 4, 5):
-        sys_, nodes, rng = build_system(n_nodes=2000, zones=1, seed=2, base_bits=b)
+        sys_, nodes, rng = build_system(n_nodes=2000, zones=1, seed=2, base_bits=b, bulk=True)
         h = sys_.CreateTree(f"fan-{b}")
-        for w in rng.choice(nodes, size=1500, replace=False):
-            sys_.Subscribe(h.app_id, int(w))
+        sys_.SubscribeMany(h.app_id, rng.choice(nodes, size=1500, replace=False))
         tree = h.tree
         # payload time per edge: 85MB over per-node bandwidth ~60 Mbps
         payload_ms = 85e6 * 8 / (60e6) * 1e3 / 1000

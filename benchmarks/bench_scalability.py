@@ -71,8 +71,9 @@ def run() -> list[str]:
     all_nodes = overlay.nodes()
     for n_sub in (100, 400, 1600):
         t_ = forest3.create_tree(f"sched-{n_sub}")
-        for w in rng2.choice(all_nodes, size=n_sub, replace=False):
-            forest3.subscribe(t_.app_id, int(w))
+        forest3.subscribe_many(
+            t_.app_id, rng2.choice(all_nodes, size=n_sub, replace=False)
+        )
         sched = t_.aggregation_schedule()
         groups = sum(len(l) for l in sched)
         out.append(

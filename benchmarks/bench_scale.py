@@ -18,15 +18,29 @@ directly against the vectorized scale layer (docs/performance.md
   the heap at O(apps + uplinks).  Peak RSS is ``resource.getrusage``'s
   high-water mark, so the sweep runs small M -> large M and each row
   reports the peak *up to and including* that M.
+- **forest bootstrap vs N** for the same N ladder: subscribe N workers
+  split across M apps through ``join_many`` + ``subscribe_many`` (the
+  vectorized union-of-paths graft) and report subscribes/s, tree
+  depth, and peak RSS.  At N <= 1e4 the bulk trees must be
+  node-for-node identical to a sequential ``subscribe`` loop (the
+  oracle — parent maps, children order, members, schedules), at
+  N = 1e5 bulk bootstrap must be >= 10x faster than the loop, and mean
+  member depth must fit ``a + c*log2(N)`` with R^2 >= 0.95.
 - **M=16 exactness anchor**: the cohort-batched core in exact mode must
   produce a byte-identical event trace (ApplyEvent/ChurnRecord
   dataclass equality, exact float timestamps) to the per-event
   baseline, and ``congestion_mode="sampled"`` with ``hot_threshold=0``
   must degenerate to the exact trace.
+- **sampled-congestion error**: apply-time relative error of sampled
+  mode vs the exact trace, with and without periodic cold-cycle
+  re-pricing (``resample_every``) — reported, not gated (the knob
+  trades exactness for events, the error bound is the datum).
 
-Gates (CI fails on regression): log-fit R^2 >= 0.95, zero oracle
-mismatches, both trace-identity checks.  ``--max-events`` threads the
-event budget through for longer runs (the budget error names it).
+Gates (CI fails on regression): hops and depth log-fit R^2 >= 0.95,
+zero oracle mismatches, bulk-vs-sequential tree identity, >= 10x
+bootstrap speedup at N=1e5, both trace-identity checks.
+``--max-events`` threads the event budget through for longer runs (the
+budget error names it).
 
 ``python -m benchmarks.bench_scale --smoke`` writes BENCH_scale.json
 (the CI artifact).
@@ -110,16 +124,98 @@ def route_scaling(ns, *, zones=8, routes=2000, parity_sample=50, seed=0) -> list
     return out
 
 
-def log_fit(curve: list[dict]) -> dict:
-    """Least-squares hops = a + c*log2(N); returns slope, intercept, R^2."""
+def log_fit(curve: list[dict], key: str = "mean_hops") -> dict:
+    """Least-squares y = a + c*log2(N) over ``curve[i][key]``; returns
+    slope, intercept, R^2."""
     x = np.log2([r["n"] for r in curve])
-    y = np.array([r["mean_hops"] for r in curve])
+    y = np.array([r[key] for r in curve])
     c, a = np.polyfit(x, y, 1)
     pred = a + c * x
     ss_res = float(((y - pred) ** 2).sum())
     ss_tot = float(((y - y.mean()) ** 2).sum())
     r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
     return {"slope_per_log2n": float(c), "intercept": float(a), "r2": float(r2)}
+
+
+# -- forest bootstrap vs N (subscribe_many against the sequential oracle) -----
+
+
+def _tree_fingerprint(tree) -> tuple:
+    """Everything the bulk graft must reproduce node-for-node: topology,
+    child order, membership, and the schedules derived from them."""
+    return (
+        tree.root,
+        sorted(tree.parent.items()),
+        [(p, list(tree.children[p])) for p in tree.children],
+        sorted(tree.members),
+        tree.aggregation_schedule(),
+    )
+
+
+def forest_bootstrap(ns, *, m_apps=4, zones=8, seed=0, oracle_max=10_000,
+                     speedup_at=100_000) -> list[dict]:
+    """Subscribe N workers across M apps, bulk vs sequential.
+
+    The sequential ``subscribe`` loop runs (on a second Forest over the
+    SAME overlay, so routes are identical) wherever it is affordable:
+    at every N <= ``oracle_max`` it is the identity oracle, and at
+    N == ``speedup_at`` it is the timing baseline for the >= 10x gate.
+    """
+    from repro.core.forest import Forest
+    from repro.core.nodeid import IdSpace
+    from repro.core.overlay import MultiRingOverlay
+
+    out = []
+    for n in ns:
+        space = IdSpace(zone_bits=int(math.log2(zones)), suffix_bits=28)
+        ov = MultiRingOverlay(space, base_bits=4, seed=seed)
+        rng = np.random.default_rng(seed + n)
+        ids = ov.join_many(
+            rng.integers(0, zones, n), coords=rng.uniform(0, 1000, (n, 2))
+        )
+        shards = np.array_split(rng.permutation(ids), m_apps)
+
+        def bulk_build():
+            bulk = Forest(ov)
+            trees = [bulk.create_tree(f"boot-{n}-{a}") for a in range(m_apps)]
+            t0 = time.perf_counter()
+            for t, shard in zip(trees, shards):
+                bulk.subscribe_many(t.app_id, shard)
+            return time.perf_counter() - t0, trees
+
+        # best-of-2: the graft is deterministic, so the rebuild only
+        # de-noises the wall clock (allocator churn from earlier axes)
+        s1, trees = bulk_build()
+        s2, trees = bulk_build()
+        bulk_s = min(s1, s2)
+        depths = np.concatenate(
+            [t.depths_of(np.asarray(sorted(t.members), np.int64)) for t in trees]
+        )
+        rec = {
+            "n": int(n),
+            "m_apps": int(m_apps),
+            "mean_depth": float(depths.mean()),
+            "max_depth": int(depths.max()),
+            "bulk_s": bulk_s,
+            "subscribes_per_sec": n / max(bulk_s, 1e-9),
+            "peak_rss_mb": _peak_rss_mb(),
+        }
+        if n <= oracle_max or n == speedup_at:
+            seq = Forest(ov)
+            seq_trees = [seq.create_tree(f"boot-{n}-{a}") for a in range(m_apps)]
+            t0 = time.perf_counter()
+            for t, shard in zip(seq_trees, shards):
+                for w in shard.tolist():
+                    seq.subscribe(t.app_id, int(w))
+            rec["seq_s"] = time.perf_counter() - t0
+            rec["speedup"] = rec["seq_s"] / max(bulk_s, 1e-9)
+            if n <= oracle_max:
+                rec["identical"] = all(
+                    _tree_fingerprint(tb) == _tree_fingerprint(ts)
+                    for tb, ts in zip(trees, seq_trees)
+                )
+        out.append(rec)
+    return out
 
 
 # -- events/s + RSS vs M (cohort-batched timing model) ------------------------
@@ -138,7 +234,8 @@ def _make_handles(sys_, nodes, rng, m, w, tag=""):
 
 def _timing_run(m_apps, *, cohort, congestion_mode, hot_threshold=4, workers=8,
                 applies=2, seed=0, base_ms=40.0, spread=6.0, model_bytes=2e5,
-                n_nodes=600, zones=4, max_events=1_000_000) -> dict:
+                n_nodes=600, zones=4, max_events=1_000_000,
+                resample_every=None, resample_events=None) -> dict:
     from repro.core.sim import AsyncBufferScheduler, ChurnModel
     from repro.fl import async_engine
 
@@ -153,6 +250,7 @@ def _timing_run(m_apps, *, cohort, congestion_mode, hot_threshold=4, workers=8,
         sys_a, handles, model_bytes=model_bytes, compute_ms=per_worker,
         buffer_k=max(2, workers // 2), churn=churn, cohort=cohort,
         congestion_mode=congestion_mode, hot_threshold=hot_threshold,
+        resample_every=resample_every, resample_events=resample_events,
     )
     t0 = time.perf_counter()
     events = sched.run(applies, max_events=max_events)
@@ -164,6 +262,7 @@ def _timing_run(m_apps, *, cohort, congestion_mode, hot_threshold=4, workers=8,
         "events_dispatched": sched.events_dispatched,
         "events_per_sec": sched.events_dispatched / max(wall, 1e-9),
         "heap_max": sched.heap_max,
+        "resamples": sched._resample_count,
     }
 
 
@@ -210,10 +309,47 @@ def trace_identity(*, m_apps=16, applies=3, seed=0, max_events=1_000_000) -> dic
     }
 
 
+def sampled_error(*, m_apps=8, applies=2, seed=1, base_ms=40.0,
+                  max_events=1_000_000) -> dict:
+    """Apply-time error of sampled congestion vs the exact trace, with
+    and without periodic cold-cycle re-pricing.  Per (app, apply_index)
+    relative |t_sampled - t_exact| / t_exact; the refresh bounds drift
+    under bursty contention (ROADMAP follow-on (c)) — reported as data,
+    not gated."""
+    kw = dict(applies=applies, seed=seed, max_events=max_events)
+    exact = _timing_run(m_apps, cohort=True, congestion_mode="exact", **kw)
+    runs = {
+        "sampled": _timing_run(
+            m_apps, cohort=True, congestion_mode="sampled", **kw
+        ),
+        "sampled_resampled": _timing_run(
+            m_apps, cohort=True, congestion_mode="sampled",
+            resample_every=2.0 * base_ms, **kw
+        ),
+    }
+    ref = {(e.app_id, e.apply_index): e.time_ms for e in exact["events"]}
+    out = {"m": int(m_apps), "applies_per_app": int(applies)}
+    for tag, r in runs.items():
+        errs = [
+            abs(e.time_ms - ref[(e.app_id, e.apply_index)])
+            / max(ref[(e.app_id, e.apply_index)], 1e-9)
+            for e in r["events"]
+            if (e.app_id, e.apply_index) in ref
+        ]
+        out[tag] = {
+            "mean_rel_err": float(np.mean(errs)) if errs else 0.0,
+            "max_rel_err": float(np.max(errs)) if errs else 0.0,
+            "events_dispatched": r["events_dispatched"],
+            "resamples": r["resamples"],
+        }
+    out["exact_events_dispatched"] = exact["events_dispatched"]
+    return out
+
+
 # -- gates / drivers ----------------------------------------------------------
 
 
-def gate(payload: dict, *, min_r2: float = 0.95) -> list[str]:
+def gate(payload: dict, *, min_r2: float = 0.95, min_speedup: float = 10.0) -> list[str]:
     """The acceptance gates; returns failure messages (empty = pass)."""
     fails = []
     fit = payload["hops_fit"]
@@ -226,6 +362,22 @@ def gate(payload: dict, *, min_r2: float = 0.95) -> list[str]:
             fails.append(
                 f"N={r['n']}: {r['oracle_mismatches']} route_many results "
                 "diverge from the scalar oracle"
+            )
+    dfit = payload["depth_fit"]
+    if dfit["r2"] < min_r2:
+        fails.append(
+            f"depth-vs-N log fit R^2 {dfit['r2']:.4f} below the {min_r2} gate"
+        )
+    for r in payload["forest_vs_n"]:
+        if "identical" in r and not r["identical"]:
+            fails.append(
+                f"N={r['n']}: subscribe_many tree diverges from the "
+                "sequential-subscribe oracle"
+            )
+        if "speedup" in r and r["n"] >= 100_000 and r["speedup"] < min_speedup:
+            fails.append(
+                f"N={r['n']}: bulk bootstrap speedup {r['speedup']:.1f}x "
+                f"below the {min_speedup}x gate"
             )
     tid = payload["trace_identity"]
     if not tid["cohort_identical"]:
@@ -247,16 +399,22 @@ def bench(*, smoke: bool, max_events: int, seed: int = 0) -> dict:
     applies = 2
     curve = route_scaling(ns, seed=seed)
     fit = log_fit(curve)
+    forest = forest_bootstrap(ns, seed=seed)
+    dfit = log_fit(forest, key="mean_depth")
     tid = trace_identity(seed=seed, max_events=max_events)
     sweep = event_scaling(ms, applies=applies, seed=seed, max_events=max_events)
+    serr = sampled_error(seed=seed + 1, max_events=max_events)
     return {
         "bench": "scale_vectorized_overlay_cohort_events",
         "smoke": bool(smoke),
         "applies_per_app": applies,
         "hops_vs_n": curve,
         "hops_fit": fit,
+        "forest_vs_n": forest,
+        "depth_fit": dfit,
         "trace_identity": tid,
         "events_vs_m": sweep,
+        "sampled_error": serr,
     }
 
 
@@ -273,8 +431,20 @@ def run() -> list[str]:
                 f"oracle_mismatches={r['oracle_mismatches']}",
             )
         )
+    for r in payload["forest_vs_n"]:
+        out.append(
+            row(
+                f"scale_forest_n{r['n']}",
+                1e6 / max(r["subscribes_per_sec"], 1e-9),
+                f"mean_depth={r['mean_depth']:.2f};"
+                f"identical={r.get('identical', 'n/a')};"
+                f"speedup={r.get('speedup', float('nan')):.1f}",
+            )
+        )
     fit = payload["hops_fit"]
+    dfit = payload["depth_fit"]
     tid = payload["trace_identity"]
+    serr = payload["sampled_error"]
     for r in payload["events_vs_m"]:
         out.append(
             row(
@@ -289,8 +459,10 @@ def run() -> list[str]:
             "scale_gates",
             0.0,
             f"fit_r2={fit['r2']:.4f};slope={fit['slope_per_log2n']:.3f};"
+            f"depth_fit_r2={dfit['r2']:.4f};"
             f"cohort_identical={tid['cohort_identical']};"
-            f"sampled_ht0_identical={tid['sampled_ht0_identical']}",
+            f"sampled_ht0_identical={tid['sampled_ht0_identical']};"
+            f"resample_mean_err={serr['sampled_resampled']['mean_rel_err']:.4f}",
         )
     )
     return out
@@ -324,6 +496,31 @@ def main() -> None:
     print(
         f"log fit: hops = {fit['intercept']:.2f} + "
         f"{fit['slope_per_log2n']:.3f}*log2(N), R^2 = {fit['r2']:.4f}"
+    )
+    for r in payload["forest_vs_n"]:
+        extra = ""
+        if "speedup" in r:
+            extra += f", {r['speedup']:.1f}x vs sequential"
+        if "identical" in r:
+            extra += f", identical={r['identical']}"
+        print(
+            f"forest N={r['n']:>9,}: {r['subscribes_per_sec']:.0f} subscribes/s, "
+            f"mean depth {r['mean_depth']:.2f} (max {r['max_depth']}), "
+            f"bulk {r['bulk_s']:.2f}s{extra}, peak RSS {r['peak_rss_mb']:.0f} MB"
+        )
+    dfit = payload["depth_fit"]
+    print(
+        f"depth fit: depth = {dfit['intercept']:.2f} + "
+        f"{dfit['slope_per_log2n']:.3f}*log2(N), R^2 = {dfit['r2']:.4f}"
+    )
+    serr = payload["sampled_error"]
+    print(
+        f"sampled apply-time error vs exact (M={serr['m']}): "
+        f"frozen mean {serr['sampled']['mean_rel_err']:.4f} "
+        f"(max {serr['sampled']['max_rel_err']:.4f}); with resample "
+        f"mean {serr['sampled_resampled']['mean_rel_err']:.4f} "
+        f"(max {serr['sampled_resampled']['max_rel_err']:.4f}, "
+        f"{serr['sampled_resampled']['resamples']} resamples)"
     )
     tid = payload["trace_identity"]
     print(

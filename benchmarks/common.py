@@ -7,7 +7,13 @@ import time
 import numpy as np
 
 
-def build_system(n_nodes=2000, zones=8, seed=0, base_bits=4, suffix_bits=24):
+def build_system(n_nodes=2000, zones=8, seed=0, base_bits=4, suffix_bits=24,
+                 bulk=False):
+    """Build a populated TotoroSystem.  ``bulk=False`` (default) joins
+    node-by-node — that exact draw order anchors the trace-identity
+    baselines, so it must not change; ``bulk=True`` is the vectorized
+    `join_many` path for benches that only need *a* population fast
+    (different rng consumption, so different node ids)."""
     from repro.core.api import TotoroSystem
 
     sys_ = TotoroSystem(
@@ -15,11 +21,17 @@ def build_system(n_nodes=2000, zones=8, seed=0, base_bits=4, suffix_bits=24):
         base_bits=base_bits, seed=seed,
     )
     rng = np.random.default_rng(seed)
-    nodes = [
-        sys_.Join("n", i, site=int(rng.integers(0, zones)), coord=rng.uniform(0, 100, 2),
-                  bandwidth=float(rng.uniform(20, 100)))
-        for i in range(n_nodes)
-    ]
+    if bulk:
+        sites = rng.integers(0, zones, n_nodes)
+        coords = rng.uniform(0, 100, (n_nodes, 2))
+        bws = rng.uniform(20, 100, n_nodes)
+        nodes = sys_.overlay.join_many(sites, coords=coords, bandwidth=bws).tolist()
+    else:
+        nodes = [
+            sys_.Join("n", i, site=int(rng.integers(0, zones)), coord=rng.uniform(0, 100, 2),
+                      bandwidth=float(rng.uniform(20, 100)))
+            for i in range(n_nodes)
+        ]
     return sys_, nodes, rng
 
 

@@ -102,6 +102,19 @@ class TotoroSystem:
         self.forest.subscribe(app_id, node)
         return True
 
+    def SubscribeMany(self, app_id: int, nodes) -> list[int]:
+        """Bulk JOIN: admit through the owner's selection_fn, then graft
+        all accepted workers in one vectorized batch
+        (``Forest.subscribe_many`` — tree identical to a ``Subscribe``
+        loop).  Returns the admitted node ids in input order."""
+        h = self.apps[app_id]
+        accepted = [int(n) for n in nodes]
+        if h.selection_fn is not None:
+            accepted = [n for n in accepted if h.selection_fn(n)]
+        if accepted:
+            self.forest.subscribe_many(app_id, accepted)
+        return accepted
+
     def Unsubscribe(self, app_id: int, node: int) -> None:
         self.forest.unsubscribe(app_id, node)
 

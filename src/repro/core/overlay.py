@@ -83,6 +83,19 @@ class RouteBatch:
     def result(self, k: int) -> RouteResult:
         return RouteResult(self.path(k), int(self.hops[k]), bool(self.blocked[k]))
 
+    def paths_flat(self) -> tuple[np.ndarray, np.ndarray]:
+        """All paths at once as a CSR pair ``(flat, offsets)``:
+        ``flat[offsets[k]:offsets[k+1]]`` equals ``path(k)`` (consecutive
+        duplicates dropped, src first).  One boolean mask over the
+        stacked snapshots instead of K Python reconstructions."""
+        H = np.stack(self._hist, axis=1)  # (K, T)
+        keep = np.ones(H.shape, bool)
+        keep[:, 1:] = H[:, 1:] != H[:, :-1]
+        lens = keep.sum(axis=1)
+        offsets = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        return H[keep], offsets
+
 
 # ---------------------------------------------------------------------------
 # storage primitives
@@ -1125,8 +1138,6 @@ def build_overlay_from_coords(
     nbins = distributed_binning(coords, min(space.num_zones, max(2, space.num_zones)), seed=seed)
     zones = nbins % space.num_zones
     rng = np.random.default_rng(seed + 1)
-    ids = []
-    for i, z in enumerate(zones):
-        bw = float(rng.uniform(*bandwidth_range))
-        ids.append(overlay.join_random(int(z), coord=coords[i], bandwidth=bw))
-    return overlay, ids
+    bws = rng.uniform(bandwidth_range[0], bandwidth_range[1], len(zones))
+    ids = overlay.join_many(zones, coords=coords, bandwidth=bws)
+    return overlay, ids.tolist()

@@ -227,6 +227,9 @@ class EventCore:
         self.handles = list(handles)
         nodes = system.overlay.nodes()
         self._node_idx = {n: i for i, n in enumerate(nodes)}
+        # vectorized mirror of _node_idx for sender_indices_many
+        self._idx_ids = np.asarray(nodes, np.int64)  # globally ascending
+        self._idx_vals = np.arange(len(nodes), dtype=np.int32)
         cap = np.asarray([system.overlay.bandwidth[n] for n in nodes], np.float32)
         self._cap_mbps = cap.astype(np.float64)
         self._cap_f32 = cap  # numpy-resident mirror for transfer_ms
@@ -261,6 +264,9 @@ class EventCore:
         self._cohorts: dict = {}  # cohort id -> [(t, seq), ...] heap
         self._cohort_of: dict[int, object] = {}  # member seq -> cohort id
         self._armed: dict[int, object] = {}  # seq in global heap -> cohort id
+        # optional per-dispatch hook (event-count-triggered congestion
+        # resampling); None keeps the dispatch loop branch nearly free
+        self._tick_hook: Callable[[], None] | None = None
 
     def _reset_clock(self) -> None:
         self.now = 0.0
@@ -282,6 +288,16 @@ class EventCore:
 
     def sender_indices(self, nodes) -> np.ndarray:
         return np.asarray([self._node_idx[n] for n in nodes], np.int32)
+
+    def sender_indices_many(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized ``sender_indices`` over an int64 id array; raises
+        KeyError (like the dict lookup) on any id the core never indexed."""
+        j = np.searchsorted(self._idx_ids, ids)
+        jj = np.minimum(j, len(self._idx_ids) - 1)
+        bad = (j >= len(self._idx_ids)) | (self._idx_ids[jj] != ids)
+        if bad.any():
+            raise KeyError(int(ids[np.flatnonzero(bad)[0]]))
+        return self._idx_vals[jj].copy()
 
     def transfer_ms(self, senders: np.ndarray, *, reduce: str = "max") -> float:
         """Price one phase's flows with every in-flight flow still active:
@@ -590,6 +606,8 @@ class EventCore:
             cb(t)
             n += 1
             self.events_dispatched += 1
+            if self._tick_hook is not None:
+                self._tick_hook()
             if n >= max_events:
                 live = len(self._heap) - self._dead
                 msg = (
@@ -972,6 +990,8 @@ class AsyncBufferScheduler(EventCore):
         cohort: bool = True,
         congestion_mode: str = "exact",
         hot_threshold: int = 4,
+        resample_every: float | None = None,
+        resample_events: int | None = None,
     ):
         super().__init__(
             system, handles, model_bytes=model_bytes, base_ms=base_ms,
@@ -981,9 +1001,22 @@ class AsyncBufferScheduler(EventCore):
             raise ValueError(
                 f"congestion_mode must be 'exact' or 'sampled', got {congestion_mode!r}"
             )
+        if (resample_every is not None or resample_events is not None) and (
+            congestion_mode != "sampled"
+        ):
+            raise ValueError(
+                "resample_every/resample_events refresh frozen cold-cycle "
+                "loads and only apply to congestion_mode='sampled'"
+            )
+        if resample_every is not None and not resample_every > 0:
+            raise ValueError(f"resample_every must be > 0 ms, got {resample_every!r}")
+        if resample_events is not None and not resample_events > 0:
+            raise ValueError(f"resample_events must be > 0, got {resample_events!r}")
         self.cohort = bool(cohort)
         self.congestion_mode = congestion_mode
         self.hot_threshold = int(hot_threshold)
+        self.resample_every = None if resample_every is None else float(resample_every)
+        self.resample_events = None if resample_events is None else int(resample_events)
         self.compute_ms = compute_ms
         self.trainer = trainer
         self.barrier = barrier
@@ -1039,6 +1072,10 @@ class AsyncBufferScheduler(EventCore):
         # statistically (a load counter) instead of as fluid flows
         self._cold_load = np.zeros(len(self._cap_f32), np.int64)
         self._cold_hops: dict[tuple[int, int], np.ndarray] = {}
+        # resampling state: in-flight cold-cycle spans for re-pricing
+        # key -> (t_priced, t_end, down_idx, up_idx, compute_ms)
+        self._cold_span: dict[tuple[int, int], tuple] = {}
+        self._resample_count = 0
 
     def _per_app(self, value, handle_attr: str, default):
         """Resolve a per-app knob: explicit arg (scalar broadcast or
@@ -1081,6 +1118,16 @@ class AsyncBufferScheduler(EventCore):
         key = (ai, w, up)
         cached = self._path_cache.get(key)
         if cached is None:
+            if ("warm", ai) not in self._path_cache:
+                # first miss after a cache clear: bulk-fill both legs for
+                # every tree member in two vectorized passes (paths_matrix
+                # + sender_indices_many) instead of per-worker walks; the
+                # marker key rides in the cache so any wholesale clear
+                # (churn repair) automatically re-arms the warm.
+                self._path_cache[("warm", ai)] = np.asarray([], np.int32)
+                self._warm_path_cache(ai)
+                cached = self._path_cache.get(key)
+        if cached is None:
             tree = self.handles[ai].tree
             if w == tree.root:
                 cached = np.asarray([], np.int32)
@@ -1090,6 +1137,31 @@ class AsyncBufferScheduler(EventCore):
                 cached = self.sender_indices(hops[:-1])
             self._path_cache[key] = cached
         return cached
+
+    def _warm_path_cache(self, ai: int) -> None:
+        """Vectorized route-table fill for one app's tree members.  Only
+        members the tree can resolve are warmed — anything else falls
+        through to the scalar path, which raises exactly where the
+        legacy per-worker walk would."""
+        tree = self.handles[ai].tree
+        root = tree.root
+        members = [w for w in tree.members if w == root or w in tree.parent]
+        if not members:
+            return
+        arr = np.asarray(members, np.int64)
+        try:
+            mat = tree.paths_matrix(arr)
+            d = tree.depths_of(arr)
+            valid = mat >= 0
+            idx = np.full(mat.shape, -1, np.int32)
+            idx[valid] = self.sender_indices_many(mat[valid])
+        except (KeyError, RuntimeError):
+            return  # mid-repair transient: scalar path reports the error
+        for i in range(len(arr)):
+            w, di = int(arr[i]), int(d[i])
+            row = idx[i]
+            self._path_cache[(ai, w, True)] = row[:di].copy()
+            self._path_cache[(ai, w, False)] = row[1 : di + 1][::-1].copy()
 
     def _sched_worker(self, ai: int, delay_ms: float, callback: Callable,
                       senders: np.ndarray | None = None) -> int:
@@ -1145,18 +1217,65 @@ class AsyncBufferScheduler(EventCore):
         if len(hops):
             np.add.at(self._cold_load, hops, 1)
             self._cold_hops[key] = hops
+            self._cold_span[key] = (self.now, self.now + dur, down, up, comp + delay, dur)
         self._pending_ev[key] = self._sched_worker(
             ai, dur, lambda t, ai=ai, w=w: self._finish_cold_cycle(ai, w, t)
         )
 
     def _release_cold(self, key: tuple[int, int]) -> None:
         hops = self._cold_hops.pop(key, None)
+        self._cold_span.pop(key, None)
         if hops is not None:
             np.subtract.at(self._cold_load, hops, 1)
 
     def _finish_cold_cycle(self, ai: int, w: int, t: float) -> None:
         self._release_cold((ai, w))
         self._on_uploaded(ai, w, t)
+
+    def _resample_cold(self, t: float) -> None:
+        """Re-price every in-flight cold cycle against *current* loads.
+
+        A cold cycle freezes its transfer price at start; under bursty
+        contention that estimate drifts.  This refresh treats the cycle
+        as a fluid job: the fraction of work left is (t_end - t) /
+        (t_end - t_priced), and finishing that fraction at today's
+        prices takes frac * new_total — the same progress-preserving
+        rule the exact engine uses when a fair-share rate changes.  Each
+        cycle's own uplink occupancy is subtracted while re-pricing (the
+        start-time price also excluded it, counting itself via the +1 in
+        ``_sampled_leg_ms``), and unchanged prices are detected by exact
+        f32 equality (identical loads reproduce the identical sum), so a
+        cycle whose congestion did not move keeps its scheduled event —
+        with no cold cycles in flight (e.g. ``hot_threshold=0``) a
+        resample is a pure no-op and the apply/churn trace stays
+        identical to exact mode."""
+        self._resample_count += 1
+        for key in list(self._cold_span):
+            span = self._cold_span.get(key)
+            hops = self._cold_hops.get(key)
+            if span is None or hops is None:
+                continue
+            t0, t1, down, up, fixed, total = span
+            if t1 <= t or t1 <= t0:
+                continue  # completing at this very instant
+            np.subtract.at(self._cold_load, hops, 1)
+            new_total = self._sampled_leg_ms(down) + fixed + self._sampled_leg_ms(up)
+            np.add.at(self._cold_load, hops, 1)
+            if new_total == total:
+                continue  # unchanged price: keep the event (no seq churn)
+            new_end = t + (t1 - t) / (t1 - t0) * new_total
+            old_ev = self._pending_ev.get(key)
+            if old_ev is not None:
+                self.cancel(old_ev)
+            ai, w = key
+            self._pending_ev[key] = self._sched_worker(
+                ai, new_end - t, lambda tt, ai=ai, w=w: self._finish_cold_cycle(ai, w, tt)
+            )
+            self._cold_span[key] = (t, new_end, down, up, fixed, new_total)
+
+    def _on_resample_timer(self, t: float) -> None:
+        self._resample_cold(t)
+        self.schedule(self.resample_every, self._on_resample_timer)
 
     def _offer_cycle(self, ai: int, w: int) -> None:
         """Gate a worker's next cycle through the selector (if any).
@@ -1641,6 +1760,8 @@ class AsyncBufferScheduler(EventCore):
         self._pending_flow.clear()
         self._cold_load[:] = 0
         self._cold_hops.clear()
+        self._cold_span.clear()
+        self._resample_count = 0
         self._delay_until.clear()
         self._cycle_start.clear()
         self._parked = [set() for _ in range(n)]
@@ -1668,6 +1789,17 @@ class AsyncBufferScheduler(EventCore):
             for w in self._workers(ai):
                 self._offer_cycle(ai, w)
         self._schedule_churn()
+        self._tick_hook = None
+        if self.resample_events is not None:
+            every = self.resample_events
+
+            def _tick() -> None:
+                if self.events_dispatched % every == 0:
+                    self._resample_cold(self.now)
+
+            self._tick_hook = _tick
+        if self.resample_every is not None:
+            self.schedule(self.resample_every, self._on_resample_timer)
         if horizon_ms is None:
             stop = lambda: all(self._done)
         else:

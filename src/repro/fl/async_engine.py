@@ -216,6 +216,8 @@ def run_async(
     cohort: bool = True,
     congestion_mode: str = "exact",
     hot_threshold: int = 4,
+    resample_every: float | None = None,
+    resample_events: int | None = None,
     max_events: int = 1_000_000,
 ) -> dict:
     """Wire an ``AsyncTrainer`` under an ``AsyncBufferScheduler`` and run
@@ -241,7 +243,10 @@ def run_async(
     per-worker events into one heap entry per app (trace-identical,
     default on); ``congestion_mode="sampled"`` prices cold cycles
     statistically with ``hot_threshold`` selecting which uplinks stay
-    exact; ``max_events`` raises the event budget for large scale runs."""
+    exact, and ``resample_every`` (simulated ms) / ``resample_events``
+    (dispatch count) periodically re-price in-flight cold cycles against
+    current loads; ``max_events`` raises the event budget for large
+    scale runs."""
     from repro.core.sim import AsyncBufferScheduler
 
     trainer = AsyncTrainer(
@@ -269,6 +274,8 @@ def run_async(
         cohort=cohort,
         congestion_mode=congestion_mode,
         hot_threshold=hot_threshold,
+        resample_every=resample_every,
+        resample_events=resample_events,
     )
     events = sched.run(applies, max_events=max_events)
     return {

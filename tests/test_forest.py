@@ -150,3 +150,133 @@ def test_zone_restricted_tree_stays_in_zone():
     for s in zone2[:30]:
         f.subscribe(tree.app_id, s)
     assert all(ov.space.zone_of(n) == 2 for n in tree.nodes())
+
+
+# -- bulk subscribe (subscribe_many == sequential subscribe oracle) ----------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic grid fallback below
+    HAVE_HYPOTHESIS = False
+
+
+def full_fingerprint(tree):
+    """Everything observable about a tree, including dict/list order."""
+    return (
+        tree.root,
+        dict(tree.parent),
+        list(tree.parent),
+        {p: list(tree.children[p]) for p in tree.children},
+        list(tree.children),
+        sorted(tree.members),
+        tree.aggregation_schedule(),
+        tree.broadcast_schedule(),
+        [sorted(l) for l in tree.levels()],
+        tree.depth(),
+        tree.fanout(),
+        {n: tree.depth_of(n) for n in sorted(tree.nodes())},
+    )
+
+
+def _bulk_vs_seq(seed, n_sub, *, restrict_zone=None, fanout_bits=None, n=900):
+    ov, rng = build(n=n, seed=seed)
+    kw = dict(restrict_zone=restrict_zone, fanout_bits=fanout_bits)
+    bulk_f, seq_f = Forest(ov), Forest(ov)
+    bt = bulk_f.create_tree("app", **kw)
+    st_ = seq_f.create_tree("app", **kw)
+    pool = (
+        ov.nodes()
+        if restrict_zone is None
+        else [x for x in ov.nodes() if ov.space.zone_of(x) == restrict_zone]
+    )
+    subs = rng.choice(pool, size=min(n_sub, len(pool)), replace=False)
+    bulk_f.subscribe_many(bt.app_id, subs)
+    for w in subs.tolist():
+        seq_f.subscribe(st_.app_id, int(w))
+    assert full_fingerprint(bt) == full_fingerprint(st_)
+    return bulk_f, seq_f, bt, st_, subs
+
+
+def test_subscribe_many_equals_sequential_grid():
+    """Deterministic grid: default, zone-restricted, and narrow-fanout
+    trees across seeds and subscriber counts."""
+    for seed in (0, 1, 2):
+        for n_sub in (1, 7, 150):
+            _bulk_vs_seq(seed, n_sub)
+    _bulk_vs_seq(3, 80, restrict_zone=2)
+    _bulk_vs_seq(4, 80, fanout_bits=1)
+    _bulk_vs_seq(5, 80, fanout_bits=2)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 50),
+        n_sub=st.integers(1, 120),
+        cfg=st.sampled_from([(None, None), (2, None), (None, 1)]),
+    )
+    def test_subscribe_many_equals_sequential_property(seed, n_sub, cfg):
+        rz, fb = cfg
+        _bulk_vs_seq(seed, n_sub, restrict_zone=rz, fanout_bits=fb, n=400)
+
+
+def test_subscribe_many_duplicates_match_sequential():
+    """Repeated ids in one batch graft exactly like repeated calls."""
+    ov, rng = build(n=500, seed=7)
+    bulk_f, seq_f = Forest(ov), Forest(ov)
+    bt = bulk_f.create_tree("app")
+    st_ = seq_f.create_tree("app")
+    picks = rng.choice(ov.nodes(), size=40, replace=True)  # dupes likely
+    bulk_f.subscribe_many(bt.app_id, picks)
+    for w in picks.tolist():
+        seq_f.subscribe(st_.app_id, int(w))
+    assert full_fingerprint(bt) == full_fingerprint(st_)
+    assert bulk_f.subscribe_many(bt.app_id, []).shape == (0,)  # no-op
+    assert full_fingerprint(bt) == full_fingerprint(st_)
+
+
+def test_unsubscribe_after_bulk_graft_matches_sequential():
+    """Interleaved LEAVEs prune a bulk-grafted tree exactly like a
+    sequentially-grafted one."""
+    bulk_f, seq_f, bt, st_, subs = _bulk_vs_seq(9, 120)
+    drop = subs[::3]
+    for w in drop.tolist():
+        bulk_f.unsubscribe(bt.app_id, int(w))
+        seq_f.unsubscribe(st_.app_id, int(w))
+    assert full_fingerprint(bt) == full_fingerprint(st_)
+    # and a bulk re-subscribe of the dropped workers re-converges
+    bulk_f.subscribe_many(bt.app_id, drop)
+    for w in drop.tolist():
+        seq_f.subscribe(st_.app_id, int(w))
+    assert full_fingerprint(bt) == full_fingerprint(st_)
+
+
+def test_ad_tree_advertise_with_bulk_created_apps():
+    """Masters advertise on create_tree, so the AD tree must be
+    identical no matter how each app's workers were subscribed."""
+    ov, rng = build(n=800, seed=11)
+    bulk_f, seq_f = Forest(ov), Forest(ov)
+    subs = rng.choice(ov.nodes(), size=60, replace=False)
+    for i in range(6):
+        b = bulk_f.create_tree(f"fl-{i}", meta={"name": f"fl-{i}", "m": i})
+        s = seq_f.create_tree(f"fl-{i}", meta={"name": f"fl-{i}", "m": i})
+        bulk_f.subscribe_many(b.app_id, subs)
+        for w in subs.tolist():
+            seq_f.subscribe(s.app_id, int(w))
+    assert full_fingerprint(bulk_f.ad_tree) == full_fingerprint(seq_f.ad_tree)
+    assert bulk_f.ad_registry == seq_f.ad_registry
+    reg = bulk_f.discover(ov.nodes()[3])
+    assert {v["name"] for v in reg.values()} == {f"fl-{i}" for i in range(6)}
+
+
+def test_subscribe_many_api_verb_respects_selection_fn():
+    sys = TotoroSystem(zone_bits=2, suffix_bits=20, seed=3)
+    rng = np.random.default_rng(0)
+    nodes = [sys.Join("n", i, site=i % 4, coord=rng.uniform(0, 10, 2)) for i in range(200)]
+    h = sys.CreateTree("bulk", selection_fn=lambda n: n % 2 == 0)
+    accepted = sys.SubscribeMany(h.app_id, nodes[:40])
+    assert accepted == [n for n in nodes[:40] if n % 2 == 0]
+    assert set(h.tree.members) == set(accepted)

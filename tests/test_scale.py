@@ -218,3 +218,113 @@ def test_log_fit_gate_math():
     fit = log_fit(curve)
     assert fit["r2"] > 0.999
     assert fit["slope_per_log2n"] == pytest.approx(0.25, rel=1e-6)
+
+
+# -- sampled-load resampling knob ---------------------------------------------
+
+
+def test_resample_requires_sampled_mode_and_positive_values():
+    from benchmarks.common import build_system
+    from repro.core.sim import AsyncBufferScheduler
+
+    sys_a, nodes_a, _ = build_system(n_nodes=50, zones=4, seed=0)
+    h = sys_a.CreateTree("rs-check")
+    sys_a.Subscribe(h.app_id, int(nodes_a[0]))
+    with pytest.raises(ValueError, match="sampled"):
+        AsyncBufferScheduler(
+            sys_a, [h], model_bytes=1e5, congestion_mode="exact",
+            resample_every=10.0,
+        )
+    with pytest.raises(ValueError, match="sampled"):
+        AsyncBufferScheduler(
+            sys_a, [h], model_bytes=1e5, congestion_mode="exact",
+            resample_events=100,
+        )
+    for bad in ({"resample_every": 0.0}, {"resample_events": -5}):
+        with pytest.raises(ValueError, match="must be > 0"):
+            AsyncBufferScheduler(
+                sys_a, [h], model_bytes=1e5, congestion_mode="sampled", **bad
+            )
+
+
+def test_resample_with_hot_threshold_zero_stays_exact():
+    """With hot_threshold=0 every cycle is hot (exact), no cold spans
+    exist, and the resample timer must be a pure no-op on the trace."""
+    kw = dict(applies=2, seed=1)
+    base = _timing_run(8, cohort=True, congestion_mode="exact", **kw)
+    deg = _timing_run(
+        8, cohort=True, congestion_mode="sampled", hot_threshold=0,
+        resample_every=25.0, **kw
+    )
+    assert base["events"] == deg["events"]
+    assert base["churn"] == deg["churn"]
+
+
+def test_resample_timer_fires_and_run_completes():
+    kw = dict(applies=2, seed=0)
+    frozen = _timing_run(8, cohort=True, congestion_mode="sampled", **kw)
+    res = _timing_run(
+        8, cohort=True, congestion_mode="sampled", resample_every=40.0, **kw
+    )
+    assert len(res["events"]) == len(frozen["events"])  # same applies done
+    assert res["resamples"] > 0
+    assert frozen["resamples"] == 0
+
+
+def test_resample_event_count_variant():
+    kw = dict(applies=2, seed=0)
+    res = _timing_run(
+        8, cohort=True, congestion_mode="sampled", resample_events=500, **kw
+    )
+    assert res["resamples"] > 0
+
+
+# -- forest bootstrap bench gates ---------------------------------------------
+
+
+def test_forest_bootstrap_identity_and_gate_math():
+    from benchmarks.bench_scale import forest_bootstrap, gate, log_fit
+
+    rows = forest_bootstrap([300, 600], m_apps=2, zones=4, seed=0,
+                            oracle_max=600, speedup_at=600)
+    assert all(r["identical"] for r in rows)
+    assert all(r["subscribes_per_sec"] > 0 for r in rows)
+    # gate() passes a clean payload and flags a broken identity/speedup
+    hops_curve = [
+        {"n": 10 ** e, "mean_hops": 1.0 + 0.25 * math.log2(10 ** e),
+         "oracle_mismatches": 0}
+        for e in (3, 4, 5)
+    ]
+    depth_curve = [
+        {"n": 10 ** e, "mean_depth": 0.8 + 0.24 * math.log2(10 ** e),
+         "identical": True, "speedup": 12.0}
+        for e in (3, 4, 5)
+    ]
+    payload = {
+        "hops_vs_n": hops_curve,
+        "hops_fit": log_fit(hops_curve),
+        "forest_vs_n": depth_curve,
+        "depth_fit": log_fit(depth_curve, key="mean_depth"),
+        "trace_identity": {
+            "cohort_identical": True, "sampled_ht0_identical": True,
+        },
+        "events_vs_m": [],
+        "applies_per_app": 2,
+    }
+    assert gate(payload) == []
+    payload["forest_vs_n"][1]["identical"] = False
+    assert any("oracle" in f for f in gate(payload))
+    payload["forest_vs_n"][1]["identical"] = True
+    payload["forest_vs_n"][2]["speedup"] = 1.5  # n=1e5 row: below the gate
+    assert any("speedup" in f for f in gate(payload))
+
+
+def test_paths_flat_matches_per_route_paths():
+    ov, rng = build_overlay(300, seed=5, churn_frac=0.1)
+    nodes = ov.node_array()
+    srcs = nodes[rng.integers(0, len(nodes), 30)]
+    keys = rng.integers(0, 1 << ov.space.total_bits, 30)
+    batch = ov.route_many(srcs, keys)
+    flat, offsets = batch.paths_flat()
+    for i in range(30):
+        assert flat[offsets[i]:offsets[i + 1]].tolist() == batch.path(i)
