@@ -200,6 +200,112 @@ def time_to_loss_guard(*, m: int = 16, seed: int = 0, target: float = 0.35) -> d
     }
 
 
+def compression_compare(
+    m: int = 64, *, seed: int = 0, target: float = 0.35
+) -> dict:
+    """The tight-uplink compression axis (docs/performance.md "compressed
+    transport"): M apps with near-zero compute and a big model, so the
+    commit uplink is the bottleneck; qsgd-int8 vs uncompressed on the
+    identical topology/schedule.  Gated (``gate_compression``): the mean
+    simulated time-to-target-loss must clearly improve under compression
+    (the ~4x smaller commit flows must actually buy wall-clock; no
+    single app may regress > 25% — a starvation guard, sized to tolerate
+    one-apply quantization shifts in the crossing time), and the mean
+    final loss may not drift more than 1e-2 from the uncompressed run
+    (int8 rounding must stay statistically free)."""
+    from repro import data as data_mod
+    from repro.fl import async_engine, rounds
+
+    workers, applies, model_bytes = 4, 12, 2e6
+    n_nodes = max(80, 5 * m)
+
+    def make_apps(sys_, nodes, rng):
+        apps = []
+        for a in range(m):
+            x, y = data_mod.synthetic_classification(workers * 24, 16, 4, seed=100 + a)
+            parts = data_mod.dirichlet_partition(y, workers, alpha=1.0, seed=200 + a)
+            ws = [int(n) for n in rng.choice(nodes, size=workers, replace=False)]
+            apps.append(
+                rounds.make_app(
+                    sys_, f"comp-{m}-{a}", workers=ws,
+                    data_by_worker={n: (x[parts[i]], y[parts[i]]) for i, n in enumerate(ws)},
+                    dim=16, num_classes=4, local_steps=3, lr=0.2, seed=a,
+                )
+            )
+        return apps
+
+    def tt(history, app_id):
+        for r in history:
+            if r["app_id"] == app_id and r["loss"] <= target:
+                return r["t_ms"]
+        return float("inf")
+
+    def run(compression):
+        sys_, nodes, rng = build_system(n_nodes=n_nodes, zones=4, seed=seed)
+        apps = make_apps(sys_, nodes, rng)
+        res = async_engine.run_async(
+            sys_, apps, applies=applies, buffer_k=4, staleness_alpha=0.5,
+            model_bytes=model_bytes, compute_ms=5.0, fair=True,
+            compression=compression, max_events=8_000_000,
+        )
+        final = {}
+        for r in res["history"]:  # last apply per app wins
+            final[r["app_id"]] = r["loss"]
+        ids = [a.handle.app_id for a in apps]
+        up = res["scheduler"].transport_stats()["uplink_bytes"]
+        return [tt(res["history"], i) for i in ids], [final[i] for i in ids], up
+
+    tt_none, loss_none, up_none = run(None)
+    tt_qsgd, loss_qsgd, up_qsgd = run("qsgd-int8")
+    ratio = [q / max(n, 1e-9) for q, n in zip(tt_qsgd, tt_none)]
+    return {
+        "m": m,
+        "target_loss": target,
+        "model_bytes": model_bytes,
+        "tt_none_ms": tt_none,
+        "tt_qsgd_ms": tt_qsgd,
+        "tt_ratio": ratio,
+        "mean_tt_ratio": float(np.mean(ratio)),
+        "max_tt_ratio": max(ratio),
+        "loss_none": loss_none,
+        "loss_qsgd": loss_qsgd,
+        "loss_gap": abs(float(np.mean(loss_qsgd)) - float(np.mean(loss_none))),
+        "bytes_ratio": float(sum(up_qsgd) / max(sum(up_none), 1e-9)),
+        "all_finite": bool(all(np.isfinite(t) for t in tt_none + tt_qsgd)),
+    }
+
+
+def gate_compression(rows: list[dict]) -> list[str]:
+    """Compressed-transport acceptance gates; human-readable failures."""
+    fails = []
+    for r in rows:
+        if not r["all_finite"]:
+            fails.append(f"compression M={r['m']}: an app never hit the target loss")
+        if r["mean_tt_ratio"] >= 0.95:
+            fails.append(
+                f"compression M={r['m']}: mean time-to-target did not clearly "
+                f"improve (qsgd/none {r['mean_tt_ratio']:.2f} >= 0.95)"
+            )
+        # starvation guard, not a per-app improvement gate: time-to-target
+        # is quantized by apply events, so a rescheduled app can cross one
+        # apply later (~10% here) without anything being wrong
+        if r["max_tt_ratio"] > 1.25:
+            fails.append(
+                f"compression M={r['m']}: an app regressed "
+                f"{(r['max_tt_ratio'] - 1) * 100:.1f}% (> 25%) under compression"
+            )
+        if r["loss_gap"] > 1e-2:
+            fails.append(
+                f"compression M={r['m']}: loss gap {r['loss_gap']:.4f} > 1e-2"
+            )
+        if r["bytes_ratio"] > 0.3:
+            fails.append(
+                f"compression M={r['m']}: uplink bytes ratio "
+                f"{r['bytes_ratio']:.3f} > 0.3 (int8+scales should be ~0.26x)"
+            )
+    return fails
+
+
 def gate(results: list[dict], guard: dict | None) -> list[str]:
     """The fairness acceptance gates; returns human-readable failures."""
     fails = []

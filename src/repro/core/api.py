@@ -54,6 +54,10 @@ class AppHandle:
     # both the share and the cap); both must be > 0
     transfer_weight: float = 1.0
     rate_cap_mbps: float | None = None
+    # commit-direction compression policy (fl/compression.CompressionPolicy
+    # or None): the async trainer quantizes delta uploads under it and the
+    # scheduler prices commit flows at policy.wire_bytes(model_bytes)
+    compression: Any | None = None
     buffer: list[BufferedDelta] = field(default_factory=list)
     # per-apply telemetry appended by ApplyBuffered: version, arrivals,
     # effective K, staleness histogram, selector utility scores
@@ -239,16 +243,28 @@ class TotoroSystem:
         staleness histogram, scores, transport — to the handle's
         ``round_records``.
         """
-        from repro.kernels.ops import buffered_aggregate
+        from repro.fl.compression import QuantizedDelta
+        from repro.kernels.ops import buffered_aggregate, buffered_aggregate_quantized
         from repro.kernels.tree_aggregate import staleness_weights
 
         h = self.apps[app_id]
         if len(h.buffer) < max(1, min_k):
             return {"result": None, "arrivals": len(h.buffer), "version": h.version}
         entries, h.buffer = h.buffer, []
+        quantized = [isinstance(e.delta, QuantizedDelta) for e in entries]
+        if any(quantized) and not all(quantized):
+            raise ValueError(
+                "ApplyBuffered: mixed quantized and raw deltas in one buffer "
+                "— an app's CompressionPolicy must cover every commit"
+            )
         if h.aggregate_fn is not None:
+            # custom aggregators see plain pytrees: dequantize up front
+            # (the fused scale/staleness composition below only applies
+            # to the built-in kernel path)
+            deltas = [e.delta.dequantize() if q else e.delta
+                      for e, q in zip(entries, quantized)]
             result = h.aggregate_fn(
-                [e.delta for e in entries],
+                deltas,
                 list(staleness_weights(
                     np.asarray([e.weight for e in entries], np.float64),
                     np.asarray([e.staleness for e in entries], np.float64),
@@ -256,6 +272,17 @@ class TotoroSystem:
                 )),
             )
             combined = None
+        elif all(quantized) and entries:
+            # dequantize INSIDE the aggregation: per-row scales compose
+            # with the staleness discount in one kernel call
+            flat, combined = buffered_aggregate_quantized(
+                [e.delta.q for e in entries],
+                [e.delta.scale for e in entries],
+                [e.weight for e in entries],
+                [e.staleness for e in entries],
+                alpha=staleness_alpha,
+            )
+            result = entries[0].delta.unflatten(np.asarray(flat))
         else:
             result, combined = buffered_aggregate(
                 [e.delta for e in entries],

@@ -299,12 +299,17 @@ class EventCore:
             raise KeyError(int(ids[np.flatnonzero(bad)[0]]))
         return self._idx_vals[jj].copy()
 
-    def transfer_ms(self, senders: np.ndarray, *, reduce: str = "max") -> float:
+    def transfer_ms(
+        self, senders: np.ndarray, *, reduce: str = "max", mbit: float | None = None
+    ) -> float:
         """Price one phase's flows with every in-flight flow still active:
         per-flow latency = base + bits / (capacity_sender / k) where k is
         the number of concurrent flows sharing that sender's uplink.
         ``reduce="max"`` models parallel flows (phase ends when the
         slowest does); ``"sum"`` models store-and-forward along a path.
+        ``mbit`` overrides the payload size (default: the full-model
+        ``packet_mbit`` — commit legs under a compression policy pass
+        their compressed size; an equal value is bit-identical).
 
         Runs on numpy-resident route/capacity tables: the old path built
         device arrays and dispatched a jitted lookup per *phase*, which
@@ -321,7 +326,7 @@ class EventCore:
         counts = np.bincount(actions, minlength=len(self._cap_f32)).astype(np.float32)
         rate = self._cap_f32[own] / np.maximum(counts[own], np.float32(1.0))
         lat = np.float32(self.base_ms) + np.float32(
-            1e3 * self.env.packet_mbit
+            1e3 * (self.env.packet_mbit if mbit is None else mbit)
         ) / np.maximum(rate, np.float32(1e-6))
         return float(lat.sum() if reduce == "sum" else lat.max())
 
@@ -936,6 +941,17 @@ class AsyncBufferScheduler(EventCore):
     are accounted per delivered commit leg; ``transport_stats()`` and the
     per-apply ``fairness_log`` expose throughput and Jain's index.
 
+    Compressed transport (docs/performance.md "compressed transport"):
+    ``app_compression`` (an ``fl/compression.CompressionPolicy``, kind
+    string, or per-app list; falling back to the handles'
+    ``compression`` fields) prices every COMMIT leg at
+    ``policy.wire_bytes(model_bytes)`` — through the fair-share flows,
+    the legacy start-time pricing, and the sampled cold-cycle legs
+    alike — and credits the uplink ledger at the same compressed size.
+    Downloads stay full-model-sized.  ``None`` / ``kind="none"``
+    reproduces the uncompressed trace byte-identically
+    (tests/test_compression.py).
+
     Two control knobs are pluggable (both default OFF, preserving the
     PR-2 trace exactly):
 
@@ -992,6 +1008,7 @@ class AsyncBufferScheduler(EventCore):
         hot_threshold: int = 4,
         resample_every: float | None = None,
         resample_events: int | None = None,
+        app_compression=None,
     ):
         super().__init__(
             system, handles, model_bytes=model_bytes, base_ms=base_ms,
@@ -1042,6 +1059,26 @@ class AsyncBufferScheduler(EventCore):
                 "share would price the app's transfers at rate 0 and its "
                 "cycles would never complete"
             )
+        # commit-direction compression (docs/performance.md "compressed
+        # transport"): a per-app CompressionPolicy shrinks the COMMIT
+        # payload, and the compressed byte count is what every pricing
+        # path sees — fair-share flows (open_flow mbit), the legacy
+        # start-time pricing, and sampled cold-cycle legs.  Downloads
+        # stay full-model-sized (the master broadcasts f32 params).
+        # policy None / kind="none" reproduces model_bytes through the
+        # same float expressions, so disabled traces are byte-identical.
+        from repro.fl.compression import CompressionPolicy, as_policy
+
+        if isinstance(app_compression, (str, CompressionPolicy)):
+            app_compression = [app_compression] * len(handles)
+        self._compression = [
+            as_policy(p) for p in self._per_app(app_compression, "compression", None)
+        ]
+        self._commit_bytes = [
+            float(model_bytes) if p is None else p.wire_bytes(model_bytes)
+            for p in self._compression
+        ]
+        self._commit_mbit = [b * 8e-6 for b in self._commit_bytes]
         self.controllers: list[AdaptiveKController | None] = []
         self.history: list[ApplyEvent] = []
         self.churn_log: list[ChurnRecord] = []
@@ -1184,11 +1221,12 @@ class AsyncBufferScheduler(EventCore):
             return True
         return any(self._uplink_load(int(s)) >= self.hot_threshold for s in hops)
 
-    def _sampled_leg_ms(self, senders: np.ndarray) -> float:
+    def _sampled_leg_ms(self, senders: np.ndarray, mbit: float | None = None) -> float:
         """Statistical store-and-forward price of one leg: each hop at its
         *current* load (fluid flows + cold cycles + this one), frozen for
         the cycle's whole duration.  Same f32 arithmetic as the legacy
-        ``transfer_ms`` pricing, with the cold-cycle load folded in."""
+        ``transfer_ms`` pricing, with the cold-cycle load folded in.
+        ``mbit`` overrides the payload size (compressed commit legs)."""
         if len(senders) == 0:
             return 0.0
         own = np.asarray(senders)
@@ -1197,7 +1235,7 @@ class AsyncBufferScheduler(EventCore):
         )
         rate = self._cap_f32[own] / np.maximum(counts, np.float32(1.0))
         lat = np.float32(self.base_ms) + np.float32(
-            1e3 * self.env.packet_mbit
+            1e3 * (self.env.packet_mbit if mbit is None else mbit)
         ) / np.maximum(rate, np.float32(1e-6))
         return float(lat.sum())
 
@@ -1212,7 +1250,10 @@ class AsyncBufferScheduler(EventCore):
             comp = float(self.compute_ms(self.handles[ai], w, cyc))
         else:
             comp = float(self.compute_ms)
-        dur = delay + self._sampled_leg_ms(down) + comp + self._sampled_leg_ms(up)
+        dur = (
+            delay + self._sampled_leg_ms(down) + comp
+            + self._sampled_leg_ms(up, self._commit_mbit[ai])
+        )
         hops = np.concatenate([down, up]).astype(np.int64)
         if len(hops):
             np.add.at(self._cold_load, hops, 1)
@@ -1259,7 +1300,10 @@ class AsyncBufferScheduler(EventCore):
             if t1 <= t or t1 <= t0:
                 continue  # completing at this very instant
             np.subtract.at(self._cold_load, hops, 1)
-            new_total = self._sampled_leg_ms(down) + fixed + self._sampled_leg_ms(up)
+            new_total = (
+                self._sampled_leg_ms(down) + fixed
+                + self._sampled_leg_ms(up, self._commit_mbit[key[0]])
+            )
             np.add.at(self._cold_load, hops, 1)
             if new_total == total:
                 continue  # unchanged price: keep the event (no seq churn)
@@ -1358,7 +1402,7 @@ class AsyncBufferScheduler(EventCore):
                 done=lambda t, ai=ai, w=w: self._on_uploaded(ai, w, t),
             )
             return
-        dur = self.transfer_ms(senders, reduce="sum")
+        dur = self.transfer_ms(senders, reduce="sum", mbit=self._commit_mbit[ai])
         self._pending_ev[(ai, w)] = self._sched_worker(
             ai, dur, lambda t, ai=ai, w=w: self._on_uploaded(ai, w, t), senders
         )
@@ -1400,11 +1444,13 @@ class AsyncBufferScheduler(EventCore):
                 lambda t, j=j, relay=hops[j]: open_hop(j, relay),
             )
 
+        leg_mbit = self._commit_mbit[ai] if commit else self.env.packet_mbit
+
         def open_hop(j: int, relay: int) -> None:
             if self._done[ai] or w in self._failed:
                 return
             self._pending_flow[key] = self.open_flow(
-                relay, self.env.packet_mbit,
+                relay, leg_mbit,
                 weight=self._weight[ai], rate_cap=self._cap[ai],
                 on_done=lambda t, j=j: hop_done(j, t), group=ai,
             )
@@ -1492,7 +1538,7 @@ class AsyncBufferScheduler(EventCore):
         # measure accounting granularity at a horizon cut; flow-level
         # byte conservation across re-prices is asserted separately
         # (tests/test_fairness.py on _Flow.delivered_mbit)
-        self._uplink_bytes[ai] += self.model_bytes * len(
+        self._uplink_bytes[ai] += self._commit_bytes[ai] * len(
             self._path_senders(ai, w, up=True)
         )
         self._pending_ev.pop(key, None)

@@ -40,6 +40,7 @@ import numpy as np
 import jax
 
 from repro.fl import engine
+from repro.fl.compression import CompressionPolicy, as_policy, commit_key, quantize_delta
 
 
 class AsyncTrainer:
@@ -49,11 +50,17 @@ class AsyncTrainer:
     ``staleness_alpha``: exponent of the 1/(1+s)^a weight discount.
     ``selector``: optional ``fl/selection.ClientSelector`` — fed each
     client's local loss + delta norm at apply time (statistical utility).
+    ``compression``: per-app ``CompressionPolicy`` (scalar broadcast or
+    list; ``None`` falls back to each ``AppHandle.compression``).  An
+    enabled policy quantizes every commit delta (``quantize_delta``)
+    under a per-commit rounding key before it enters ``CommitDelta`` —
+    the buffered entries then carry ``QuantizedDelta`` wire payloads and
+    ``ApplyBuffered`` dequantizes inside the aggregation kernel.
     """
 
     def __init__(
         self, system, apps, *, staleness_alpha: float = 0.5, replicate: bool = True,
-        selector=None, megabatch: bool = True,
+        selector=None, megabatch: bool = True, compression=None,
     ):
         self.system = system
         self.apps = list(apps)
@@ -62,11 +69,20 @@ class AsyncTrainer:
         self.selector = selector
         self.megabatch = bool(megabatch)
         n = len(self.apps)
+        if isinstance(compression, (str, CompressionPolicy)):
+            compression = [compression] * n
+        if compression is None:
+            compression = [getattr(a.handle, "compression", None) for a in self.apps]
+        assert len(compression) == n
+        self._compression = [as_policy(p) for p in compression]
+        # monotone per-app commit counter: seeds each commit's rounding
+        # key (compression.commit_key) so rounding bits never repeat
+        self._commit_seq = [0] * n
         self.version = [0] * n
         self._snapshots = [{0: a.params} for a in self.apps]  # version -> params
         self._refs = [{0: 0} for _ in range(n)]  # version -> in-flight users
         self._worker_version = [dict() for _ in range(n)]  # worker -> version
-        self._pending = [[] for _ in range(n)]  # committed (worker, version)
+        self._pending = [[] for _ in range(n)]  # committed (worker, version, seq)
         self.history: list[dict] = []
 
     # -- scheduler hooks -------------------------------------------------------
@@ -83,9 +99,13 @@ class AsyncTrainer:
 
     def commit(self, ai: int, w: int, t: float) -> None:
         """``w``'s upload landed: move it to the apply queue (its delta is
-        materialized lazily at apply time, batched with its version peers)."""
+        materialized lazily at apply time, batched with its version peers).
+        The commit sequence number is pinned here — delivery order — so a
+        worker lapping the buffer twice gets two distinct rounding keys."""
         v = self._worker_version[ai].pop(w)
-        self._pending[ai].append((w, v))
+        seq = self._commit_seq[ai]
+        self._commit_seq[ai] += 1
+        self._pending[ai].append((w, v, seq))
 
     def drop(self, ai: int, w: int) -> None:
         """``w`` failed mid-cycle: release its version pin.  Commits it
@@ -113,9 +133,9 @@ class AsyncTrainer:
         if not pending:  # commit batch drained (e.g. by churn)
             return None
         cur = self.version[ai]
-        groups: dict[int, list[int]] = {}
-        for w, v in pending:
-            groups.setdefault(v, []).append(w)
+        groups: dict[int, list[tuple[int, int]]] = {}
+        for w, v, seq in pending:
+            groups.setdefault(v, []).append((w, seq))
         versions = sorted(groups)
         if self.megabatch:
             # every version group of this apply stacks into ONE compiled
@@ -123,21 +143,26 @@ class AsyncTrainer:
             # params, so staleness-ragged buffers stop costing one XLA
             # program (and often one compile) per version
             trained = engine.fused_local_training(
-                [(app, groups[v], self._snapshots[ai][v]) for v in versions]
+                [(app, [w for w, _ in groups[v]], self._snapshots[ai][v]) for v in versions]
             )
         else:  # pre-optimization path: one dispatch per version group
             trained = [
                 engine.local_training(
-                    app, groups[v], params=self._snapshots[ai][v], bucketed=False
+                    app, [w for w, _ in groups[v]], params=self._snapshots[ai][v],
+                    bucketed=False,
                 )
                 for v in versions
             ]
+        policy = self._compression[ai]
         losses, loss_weights = [], []
         for v, (deltas, weights, group_losses) in zip(versions, trained):
             ws = groups[v]
-            for w, d, wt, l in zip(ws, deltas, weights, group_losses):
+            for (w, seq), d, wt, l in zip(ws, deltas, weights, group_losses):
+                payload = d
+                if policy is not None and policy.enabled:
+                    payload = quantize_delta(d, policy, commit_key(policy, ai, seq))
                 self.system.CommitDelta(
-                    app.handle.app_id, w, d, weight=wt, staleness=cur - v
+                    app.handle.app_id, w, payload, weight=wt, staleness=cur - v
                 )
                 losses.append(l)
                 loss_weights.append(wt)
@@ -178,7 +203,7 @@ class AsyncTrainer:
             "arrivals": len(pending),
             "k": k,
             "loss": float(np.average(losses, weights=loss_weights)),
-            "mean_staleness": float(np.mean([cur - v for _, v in pending])),
+            "mean_staleness": float(np.mean([cur - v for _, v, _ in pending])),
         }
         self.history.append(record)
         app.history.append(record)
@@ -211,6 +236,7 @@ def run_async(
     app_weights=None,
     app_rate_caps=None,
     relay_admission=None,
+    compression=None,
     megabatch: bool = True,
     incremental: bool = True,
     cohort: bool = True,
@@ -239,6 +265,13 @@ def run_async(
     ``relay_admission`` (a ``core.sim.RelayAdmission``) defers stale
     commits at contended relays.
 
+    ``compression`` (a ``fl/compression.CompressionPolicy``, kind string,
+    per-app list, or ``None`` for the handles' ``compression`` fields)
+    turns on commit-direction quantization: the trainer serializes each
+    delta to a ``QuantizedDelta`` and the scheduler prices commit legs
+    at the compressed wire size (docs/performance.md "compressed
+    transport").
+
     Scale knobs (docs/performance.md "scale layer"): ``cohort`` batches
     per-worker events into one heap entry per app (trace-identical,
     default on); ``congestion_mode="sampled"`` prices cold cycles
@@ -251,7 +284,7 @@ def run_async(
 
     trainer = AsyncTrainer(
         system, apps, staleness_alpha=staleness_alpha, selector=selector,
-        megabatch=megabatch,
+        megabatch=megabatch, compression=compression,
     )
     sched = AsyncBufferScheduler(
         system,
@@ -270,6 +303,7 @@ def run_async(
         app_weights=app_weights,
         app_rate_caps=app_rate_caps,
         relay_admission=relay_admission,
+        app_compression=compression,
         incremental=incremental,
         cohort=cohort,
         congestion_mode=congestion_mode,

@@ -4,8 +4,35 @@ The paper's ``Broadcast``/``Aggregate`` APIs accept application-specified
 compression functions (Table II; refs [37] QSGD, [38] signSGD).  These are
 the pure-JAX implementations; ``repro.kernels.quantize`` is the Pallas TPU
 version of the QSGD hot loop (bit-identical given the same random bits).
+
+Compressed transport (docs/performance.md "compressed transport"): a
+``CompressionPolicy`` rides on ``AppHandle.compression`` (or the async
+scheduler's ``app_compression`` knob) and governs the *commit* direction
+— workers' delta uploads.  ``quantize_delta`` serializes an update
+pytree into a ``QuantizedDelta`` (int8 payload + per-chunk f32 scales),
+``CommitDelta`` buffers it as-is, and ``ApplyBuffered`` dequantizes
+*inside* the buffered aggregation (``kernels.ops.
+buffered_aggregate_quantized``: per-row scales compose with the
+staleness weights in one kernel call).  The scheduler prices commit
+flows at ``CompressionPolicy.wire_bytes(model_bytes)``, so the
+compressed byte count is what enters ``EventCore.open_flow`` — fair
+shares, caps, relay admission and sampled cold loads all see the
+smaller flows.  ``kind="none"`` is proven byte-identical to the
+uncompressed path (tests/test_compression.py).
+
+Rounding bits: every commit draws its own PRNG key via ``commit_key``
+(policy seed -> app -> commit sequence number), so repeated commits do
+not share rounding bias — the old deterministic default (``rand=0.5``
+everywhere) rounded every commit half-down identically.  A fixed
+(policy, app, seq) triple reproduces the wire bytes exactly.
 """
 from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +43,10 @@ def qsgd_quantize(x: jax.Array, *, levels: int = 127, key=None, rand=None):
 
     x: (..., d).  Returns (q int8, scale f32 (..., 1)).
     ``rand``: optional precomputed uniforms in [0,1) (for bit-exact refs).
+    With neither ``key`` nor ``rand``, rounding is deterministic
+    round-half-down (``rand=0.5``) — fine for one-shot use, but commits
+    must thread a per-commit key (``commit_key``) or they all share the
+    same rounding bias.
     """
     xf = x.astype(jnp.float32)
     scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / levels
@@ -61,3 +92,156 @@ def error_feedback_update(x: jax.Array, err: jax.Array, compress_fn):
     c, scale = compress_fn(target)
     approx = c.astype(jnp.float32) * scale
     return (c, scale), target - approx
+
+
+# -- per-app commit compression policy (bytes on the wire) ---------------------
+
+_KINDS = ("none", "qsgd-int8")
+
+
+@dataclass(frozen=True)
+class CompressionPolicy:
+    """Per-app commit-direction compression (paper Table II's per-app
+    compression hooks, made first-class for the transport model).
+
+    ``kind``: ``"none"`` (full f32 payloads, the byte-identical default)
+    or ``"qsgd-int8"`` (QSGD stochastic int8, one f32 max-abs scale per
+    ``chunk`` elements).  ``levels`` is the quantization grid per sign
+    (<= 127 so the lattice fits int8).  ``seed`` roots the per-commit
+    rounding-key chain (``commit_key``)."""
+
+    kind: str = "none"
+    levels: int = 127
+    chunk: int = 256
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"compression kind must be one of {_KINDS}, got {self.kind!r}")
+        if not 1 <= int(self.levels) <= 127:
+            raise ValueError(f"levels must be in [1, 127] (int8 lattice), got {self.levels!r}")
+        if int(self.chunk) < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+    def wire_bytes(self, payload_bytes: float) -> float:
+        """Modeled bytes on the wire for a ``payload_bytes`` f32 payload.
+
+        qsgd-int8 serializes n = payload_bytes/4 elements as one int8
+        each, padded to whole chunks, plus one f32 scale per chunk —
+        exactly ``QuantizedDelta.nbytes`` for a real n-element delta
+        (tested).  ``kind="none"`` returns the input unchanged (same
+        float object arithmetic as the uncompressed path, so pricing is
+        bit-identical)."""
+        if not self.enabled:
+            return float(payload_bytes)
+        n = float(payload_bytes) / 4.0
+        rows = math.ceil(n / self.chunk)
+        return float(rows * self.chunk + rows * 4)
+
+
+def as_policy(value) -> CompressionPolicy | None:
+    """Normalize a policy knob: None, a ``CompressionPolicy``, or a kind
+    string (``"qsgd-int8"``)."""
+    if value is None or isinstance(value, CompressionPolicy):
+        return value
+    if isinstance(value, str):
+        return CompressionPolicy(kind=value)
+    raise TypeError(f"expected CompressionPolicy, kind string or None, got {value!r}")
+
+
+def commit_key(policy: CompressionPolicy, app_idx: int, commit_seq: int):
+    """The per-commit rounding key: policy seed -> app -> commit number.
+
+    The sequence number is assigned when the scheduler delivers the
+    commit (``AsyncTrainer.commit``), so the chain is deterministic for
+    a given event trace: a fixed (seed, app, seq) reproduces the wire
+    bytes exactly, while consecutive commits draw decorrelated uniforms
+    (tests/test_compression.py)."""
+    base = jax.random.PRNGKey(int(policy.seed))
+    return jax.random.fold_in(jax.random.fold_in(base, int(app_idx)), int(commit_seq))
+
+
+@dataclass(frozen=True)
+class QuantizedDelta:
+    """One worker delta serialized for the wire: int8 lattice points +
+    per-chunk f32 scales + the pytree structure needed to rebuild it.
+
+    ``q`` is (R, chunk) int8 (the flattened, zero-padded delta), ``scale``
+    (R, 1) f32.  Dequantization is ``q * scale`` row-wise; padding
+    elements quantize to exactly 0 (|0/scale + u| < 1 for u in [0, 1))
+    and are dropped by ``unflatten``."""
+
+    q: np.ndarray
+    scale: np.ndarray
+    length: int                 # unpadded element count
+    shapes: tuple               # leaf shapes, flatten order
+    treedef: Any
+    levels: int
+    chunk: int
+
+    @property
+    def nbytes(self) -> float:
+        """Serialized wire size (what ``CommitDelta`` accounts)."""
+        return float(self.q.nbytes + self.scale.nbytes)
+
+    def unflatten(self, flat) -> Any:
+        """Rebuild the delta pytree from a flat (>= length,) f32 vector."""
+        vec = np.asarray(flat)[: self.length]
+        leaves, off = [], 0
+        for s in self.shapes:
+            size = int(np.prod(s)) if s else 1
+            leaves.append(vec[off : off + size].reshape(s))
+            off += size
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def dequantize(self) -> Any:
+        """Unfused reference: dequantize this delta alone (the fused
+        apply-side path composes scales with staleness weights instead —
+        ``kernels.ops.buffered_aggregate_quantized``)."""
+        flat = self.q.astype(np.float32) * self.scale.astype(np.float32)
+        return self.unflatten(flat.reshape(-1))
+
+
+def quantize_delta(delta, policy: CompressionPolicy, key=None) -> QuantizedDelta:
+    """Serialize an update pytree under ``policy`` (must be enabled).
+
+    Routes through the kernel wrapper (``kernels.ops.qsgd_quantize``:
+    Pallas on TPU, compiled ref off-TPU) when the chunking matches the
+    kernel's 256-lane row; any other ``chunk`` takes the pure-JAX path —
+    both are bit-identical given the same uniforms.  ``key=None`` falls
+    back to deterministic round-half-down (tests only; the commit path
+    always threads ``commit_key``)."""
+    if not policy.enabled:
+        raise ValueError("quantize_delta requires an enabled policy (kind != 'none')")
+    leaves, treedef = jax.tree.flatten(delta)
+    shapes = tuple(np.shape(l) for l in leaves)
+    flat = jnp.concatenate(
+        [jnp.ravel(l).astype(jnp.float32) for l in leaves]
+    ) if leaves else jnp.zeros((0,), jnp.float32)
+    n = int(flat.size)
+    chunk = int(policy.chunk)
+    rows = max(1, math.ceil(n / chunk))
+    padded = jnp.zeros((rows * chunk,), jnp.float32).at[:n].set(flat)
+    x2d = padded.reshape(rows, chunk)
+    if key is None:
+        rand = jnp.full((rows, chunk), 0.5, jnp.float32)
+    else:
+        rand = jax.random.uniform(key, (rows, chunk), jnp.float32)
+    if chunk == 256:
+        from repro.kernels import ops as kops
+
+        q, s = kops.qsgd_quantize(x2d, rand, levels=int(policy.levels))
+    else:
+        q, s = qsgd_quantize(x2d, levels=int(policy.levels), rand=rand)
+    return QuantizedDelta(
+        q=np.asarray(q), scale=np.asarray(s), length=n, shapes=shapes,
+        treedef=treedef, levels=int(policy.levels), chunk=chunk,
+    )
+
+
+def dequantize_delta(qd: QuantizedDelta) -> Any:
+    return qd.dequantize()

@@ -175,6 +175,37 @@ def buffered_aggregate(updates: list, weights, staleness, *, alpha: float = 0.5)
     return _unflatten_like(agg, updates[0]), w
 
 
+def buffered_aggregate_quantized(qs, scales, weights, staleness, *, alpha: float = 0.5):
+    """Staleness-weighted aggregate of K *quantized* deltas, dequantized
+    inside the aggregation (the compressed-transport apply path).
+
+    ``qs``: K int8 arrays (R, C) — each worker's flattened delta on the
+    QSGD lattice; ``scales``: K f32 arrays (R, 1) — the per-chunk
+    max-abs scales.  Instead of dequantizing each delta and re-running
+    ``buffered_aggregate``, the per-row scale composes with the
+    staleness discount into ONE weight per (row, worker):
+
+        agg[r, :] = sum_k (w_k * s_{k,r}) * q_k[r, :] / sum_k w_k
+
+    where ``w_k = weight_k / (1+staleness_k)^alpha`` — exactly the
+    unfused ``buffered_aggregate(dequantize(q_k * s_k), ...)`` result
+    (linearity; checked to fp tolerance in tests/test_compression.py).
+    The R rows form the group axis of ``tree_aggregate_groups``, so the
+    fused path rides the same Pallas kernel / compiled fallback and the
+    same shape buckets as the uncompressed apply.
+
+    Returns (flat (R*C,) f32 aggregate, combined weights (K,) f32);
+    callers unflatten via ``QuantizedDelta.unflatten``.
+    """
+    w = _ta.staleness_weights(weights, staleness, alpha)  # (K,)
+    q = jnp.stack([jnp.asarray(x) for x in qs]).astype(jnp.float32)  # (K, R, C)
+    s = jnp.stack([jnp.asarray(x).reshape(-1) for x in scales])  # (K, R)
+    g = jnp.transpose(q, (1, 0, 2))  # (R, K, C)
+    gw = jnp.transpose(w[:, None] * s)  # (R, K): staleness x per-row scale
+    agg = tree_aggregate_groups(g, gw) / jnp.maximum(w.sum(), 1e-12)
+    return jnp.ravel(agg), w
+
+
 def jain_fairness(x) -> float:
     """Jain's fairness index ``(sum x)^2 / (n * sum x^2)`` in (0, 1].
 
@@ -193,9 +224,9 @@ def jain_fairness(x) -> float:
     return (s * s) / (v.size * q)
 
 
-@functools.partial(jax.jit)
-def _qsgd_quantize_jnp(x, rand):
-    return _ref.quantize_ref(x, rand)
+@functools.partial(jax.jit, static_argnames=("levels",))
+def _qsgd_quantize_jnp(x, rand, levels=127):
+    return _ref.quantize_ref(x, rand, levels=levels)
 
 
 @functools.partial(jax.jit)
@@ -203,13 +234,14 @@ def _qsgd_dequantize_jnp(q, scale):
     return _ref.dequantize_ref(q, scale)
 
 
-def qsgd_quantize(x: jax.Array, rand: jax.Array):
-    """(R, 256) -> (int8, scales); pads rows to the block size."""
+def qsgd_quantize(x: jax.Array, rand: jax.Array, *, levels: int = 127):
+    """(R, 256) -> (int8, scales); pads rows to the block size.
+    ``levels`` (static) is the per-sign lattice size (<= 127)."""
     if _use_jnp():
-        return _qsgd_quantize_jnp(x, rand)
+        return _qsgd_quantize_jnp(x, rand, levels=levels)
     xp, pad = _pad_to(x, _q.ROWS_PER_BLOCK, axis=0)
     rp, _ = _pad_to(rand, _q.ROWS_PER_BLOCK, axis=0)
-    q, s = _q.qsgd_quantize(xp, rp, interpret=_interpret())
+    q, s = _q.qsgd_quantize(xp, rp, interpret=_interpret(), levels=levels)
     R = x.shape[0]
     return q[:R], s[:R]
 

@@ -22,10 +22,10 @@ ROWS_PER_BLOCK = 256
 LEVELS = 127
 
 
-def _quant_kernel(x_ref, r_ref, q_ref, s_ref):
+def _quant_kernel(x_ref, r_ref, q_ref, s_ref, *, levels: int = LEVELS):
     x = x_ref[...].astype(jnp.float32)  # (RB, 256)
     r = r_ref[...].astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / LEVELS
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / levels
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.floor(x / scale + r)
     q_ref[...] = q.astype(jnp.int8)
@@ -36,14 +36,19 @@ def _dequant_kernel(q_ref, s_ref, o_ref):
     o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def qsgd_quantize(x: jax.Array, rand: jax.Array, *, interpret: bool = False):
-    """x, rand: (R, 256) with R % ROWS_PER_BLOCK == 0 -> (int8 (R,256), f32 (R,1))."""
+@functools.partial(jax.jit, static_argnames=("interpret", "levels"))
+def qsgd_quantize(
+    x: jax.Array, rand: jax.Array, *, interpret: bool = False, levels: int = LEVELS
+):
+    """x, rand: (R, 256) with R % ROWS_PER_BLOCK == 0 -> (int8 (R,256), f32 (R,1)).
+
+    ``levels`` (static, <= 127) is the per-sign lattice size — the
+    ``CompressionPolicy.levels`` knob; the grid respecializes per value."""
     R, W = x.shape
     assert W == ROW and R % ROWS_PER_BLOCK == 0, (R, W)
     grid = (R // ROWS_PER_BLOCK,)
     return pl.pallas_call(
-        _quant_kernel,
+        functools.partial(_quant_kernel, levels=levels),
         grid=grid,
         in_specs=[
             pl.BlockSpec((ROWS_PER_BLOCK, ROW), lambda i: (i, 0)),
