@@ -1,58 +1,159 @@
 """Figs 11-14: adaptivity — cumulative packet latency, Nash regret,
 selection frequencies for Totoro+ vs Totoro(bandit) vs OPT on a
-constrained-bandwidth (20-100 Mbps) hop set."""
+constrained-bandwidth (20-100 Mbps) hop set.
+
+Gates (``gate_adaptivity``):
+
+- the game-theoretic planner beats the bandit baseline on cumulative
+  latency and on final Nash regret (the paper's Fig 11/13 ordering);
+- it stays within 1.3x of the clairvoyant OPT planner's latency;
+- its selection-frequency spread (Fig 14) is no wider than the
+  bandit's — ε-Nash play spreads load instead of herding.
+
+``python -m benchmarks.bench_adaptivity --smoke`` writes
+``BENCH_adaptivity.json`` (a CI artifact).  Seeded and deterministic.
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
 
 import numpy as np
 
-from .common import row, timeit
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import row, timeit
 
 
-def run() -> list[str]:
+def _env():
     from repro.core.congestion import make_env
+
+    env = make_env(8, seed=7, bw_range=(20.0, 100.0))
+    return env.__class__(capacity=env.capacity, theta=env.theta, packet_mbit=2.0)
+
+
+def adaptivity_compare(episodes: int = 40, n: int = 128) -> dict:
+    """Run the three planners on one seeded env; return gate inputs."""
     from repro.core.pathplan import (
         BanditPlanner, GameTheoreticPlanner, OptPlanner, run_planner,
     )
 
-    env = make_env(8, seed=7, bw_range=(20.0, 100.0))
-    env = env.__class__(capacity=env.capacity, theta=env.theta, packet_mbit=2.0)
-    N, episodes = 128, 40
-    out = []
-
-    results = {}
+    env = _env()
+    out = {}
     for name, planner in (
-        ("totoro_plus", GameTheoreticPlanner(N, 8, tau=16, alpha=0.98, beta=0.5, seed=0)),
-        ("totoro_bandit", BanditPlanner(N, 8, tau=16)),
-        ("opt", OptPlanner(env, N, tau=16)),
+        ("totoro_plus", GameTheoreticPlanner(n, 8, tau=16, alpha=0.98, beta=0.5, seed=0)),
+        ("totoro_bandit", BanditPlanner(n, 8, tau=16)),
+        ("opt", OptPlanner(env, n, tau=16)),
     ):
         t, series = timeit(lambda p=planner: run_planner(p, env, episodes), repeat=1)
-        results[name] = series
+        f = np.asarray(series["selection_freq"])
+        out[name] = {
+            "us_per_episode": t / episodes * 1e6,
+            "cum_latency_ms": float(series["cum_latency_ms"][-1]),
+            "final_nash_regret": float(np.mean(series["nash_regret"][-8:])),
+            "mean_reward": float(np.mean(series["mean_reward"][-8:])),
+            "selection_spread": float(f.max() - f.min()),
+        }
+    return out
+
+
+def alpha_sweep(episodes: int = 25, n: int = 128) -> dict:
+    from repro.core.pathplan import GameTheoreticPlanner, run_planner
+
+    env = _env()
+    out = {}
+    for alpha in (0.6, 0.8, 0.95):
+        p = GameTheoreticPlanner(n, 8, tau=16, alpha=alpha, beta=0.5, seed=2)
+        s = run_planner(p, env, episodes)
+        out[f"alpha{alpha}"] = float(s["cum_latency_ms"][-1])
+    return out
+
+
+def gate_adaptivity(results: dict) -> list[str]:
+    fails = []
+    tp, tb, opt = results["totoro_plus"], results["totoro_bandit"], results["opt"]
+    if tp["cum_latency_ms"] > tb["cum_latency_ms"]:
+        fails.append(
+            f"totoro_plus cum latency {tp['cum_latency_ms']:.0f} > "
+            f"bandit {tb['cum_latency_ms']:.0f}"
+        )
+    if tp["final_nash_regret"] > tb["final_nash_regret"]:
+        fails.append(
+            f"totoro_plus final regret {tp['final_nash_regret']:.4f} > "
+            f"bandit {tb['final_nash_regret']:.4f}"
+        )
+    if tp["cum_latency_ms"] > 1.3 * opt["cum_latency_ms"]:
+        fails.append(
+            f"totoro_plus cum latency {tp['cum_latency_ms']:.0f} > "
+            f"1.3x OPT {opt['cum_latency_ms']:.0f}"
+        )
+    if tp["selection_spread"] > tb["selection_spread"]:
+        fails.append(
+            f"totoro_plus selection spread {tp['selection_spread']:.3f} > "
+            f"bandit {tb['selection_spread']:.3f}"
+        )
+    return fails
+
+
+def run() -> list[str]:
+    results = adaptivity_compare()
+    out = []
+    for name, r in results.items():
         out.append(
             row(
                 f"fig11_13_{name}",
-                t / episodes * 1e6,
-                f"cum_latency_ms={series['cum_latency_ms'][-1]:.0f};"
-                f"final_nash_regret={np.mean(series['nash_regret'][-8:]):.4f};"
-                f"mean_reward={np.mean(series['mean_reward'][-8:]):.3f}",
+                r["us_per_episode"],
+                f"cum_latency_ms={r['cum_latency_ms']:.0f};"
+                f"final_nash_regret={r['final_nash_regret']:.4f};"
+                f"mean_reward={r['mean_reward']:.3f}",
             )
         )
-
-    # Fig 14: selection-frequency spread (min/max across hops)
-    for name, series in results.items():
-        f = np.asarray(series["selection_freq"])
+    # Fig 14: selection-frequency spread (max - min across hops)
+    for name, r in results.items():
         out.append(
-            row(f"fig14_selection_{name}", 0.0, f"min={f.min():.3f};max={f.max():.3f}")
+            row(f"fig14_selection_{name}", 0.0, f"spread={r['selection_spread']:.3f}")
         )
-
     # Fig 12-like: alpha sweep (CDF quality proxy: final latency)
-    for alpha in (0.6, 0.8, 0.95):
-        p = GameTheoreticPlanner(N, 8, tau=16, alpha=alpha, beta=0.5, seed=2)
-        s = run_planner(p, env, 25)
-        out.append(
-            row(
-                f"fig12_alpha{alpha}",
-                0.0,
-                f"cum_latency_ms={s['cum_latency_ms'][-1]:.0f}",
-            )
-        )
+    for key, cum in alpha_sweep().items():
+        out.append(row(f"fig12_{key}", 0.0, f"cum_latency_ms={cum:.0f}"))
     return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--smoke", action="store_true",
+                    help="planner compare only (skip the alpha sweep)")
+    ap.add_argument("--out", default="BENCH_adaptivity.json")
+    args = ap.parse_args(argv)
+
+    results = adaptivity_compare()
+    for name, r in results.items():
+        print(
+            f"{name}: cum_latency={r['cum_latency_ms']:.0f}ms "
+            f"regret={r['final_nash_regret']:.4f} "
+            f"spread={r['selection_spread']:.3f}"
+        )
+    payload = {"bench": "adaptivity", "smoke": bool(args.smoke), "results": results}
+    if not args.smoke:
+        payload["alpha_sweep"] = alpha_sweep()
+    out_path = os.path.abspath(args.out)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, allow_nan=False)
+    print(f"wrote {out_path}")
+
+    fails = gate_adaptivity(results)
+    for msg in fails:
+        print(f"GATE FAIL: {msg}")
+    if fails:
+        raise SystemExit(1)
+    print("adaptivity gates passed: game-theoretic planner beats bandit on "
+          "latency+regret, within 1.3x OPT, tighter selection spread")
+
+
+if __name__ == "__main__":
+    main()

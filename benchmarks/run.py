@@ -41,7 +41,9 @@ REGISTRY: list[tuple[str, str, str]] = [
     ("time_to_accuracy(TabIII/Fig8-9)", "benchmarks.bench_time_to_accuracy",
      "FedAvg/FedProx rounds to target accuracy on non-IID shards"),
     ("adaptivity(Fig11-14)", "benchmarks.bench_adaptivity",
-     "tree re-planning quality under membership and bandwidth drift"),
+     "game-theoretic vs bandit vs OPT planner: cumulative latency, Nash regret, selection spread (gated ordering)"),
+    ("placement(live)", "benchmarks.bench_placement",
+     "live placement loop vs static trees: time-to-target-loss <= 0.95x and Jain no worse under >=10% churn, placement=None trace identity"),
     ("runtime(Fig15-16)", "benchmarks.bench_runtime",
      "end-to-end simulated round time across model sizes"),
     ("recovery(Fig17-18)", "benchmarks.bench_recovery",

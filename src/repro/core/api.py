@@ -122,6 +122,21 @@ class TotoroSystem:
     def Unsubscribe(self, app_id: int, node: int) -> None:
         self.forest.unsubscribe(app_id, node)
 
+    def UnsubscribeMany(self, app_id: int, nodes) -> None:
+        """Bulk LEAVE (mass-leave / zone-outage repair): splice leaving
+        relays' children to their grandparents and prune dead chains in
+        one vectorized fixpoint (``Forest.unsubscribe_many`` — tree
+        identical to an ``unsubscribe_one`` loop)."""
+        self.forest.unsubscribe_many(app_id, nodes)
+
+    def Regraft(self, app_id: int, moves, *, strict: bool = True) -> list[tuple[int, int]]:
+        """Batched placement re-graft: move each ``(node, new_parent)``
+        subtree (``Forest.regraft_many`` — tree identical to a
+        ``regraft`` loop).  The live ``PlacementEngine`` applies its
+        decisions through this verb's forest path.  Returns the applied
+        pairs."""
+        return self.forest.regraft_many(app_id, moves, strict=strict)
+
     def Broadcast(self, app_id: int, obj: Any) -> dict:
         """Master disseminates a model (or AppIds) down the tree."""
         h = self.apps[app_id]

@@ -1010,6 +1010,169 @@ class Forest:
             tree.children[p].remove(node)
             node = p
 
+    # -- placement re-grafts + bulk LEAVE --------------------------------------
+
+    @staticmethod
+    def _regraft_edge(tree: DataflowTree, node: int, new_parent: int) -> int:
+        """Move one child->parent edge through the O(1) list primitives.
+        The parent-map update goes through ``_ParentView.__setitem__`` on
+        an existing key, which preserves the node's insertion sequence —
+        so re-grafts never reorder ``tree.parent`` iteration."""
+        old = tree.parent[node]
+        tree.children[old].remove(node)
+        tree.parent[node] = new_parent
+        tree.children.setdefault(new_parent, []).append(node)
+        return old
+
+    @staticmethod
+    def _check_regraft(tree: DataflowTree, node: int, new_parent: int) -> None:
+        if node == tree.root:
+            raise ValueError(f"cannot re-graft the root {node}")
+        if node not in tree.parent:
+            raise KeyError(node)
+        if new_parent != tree.root and new_parent not in tree.parent:
+            raise KeyError(new_parent)
+        # cycle guard: the new parent must not live in node's subtree
+        cur, hops = new_parent, 0
+        while cur != tree.root:
+            if cur == node:
+                raise ValueError(
+                    f"regraft cycle: {new_parent} is in the subtree of {node}"
+                )
+            cur = tree.parent[cur]
+            hops += 1
+            if hops > len(tree.parent) + 1:
+                raise RuntimeError("corrupt tree: parent walk did not terminate")
+
+    def regraft(self, app_id: int, node: int, new_parent: int) -> int:
+        """Move ``node`` (with its whole subtree) under ``new_parent``
+        after validating reachability and acyclicity.  Scalar oracle for
+        :meth:`regraft_many`; returns the old parent."""
+        tree = self.trees[app_id]
+        self._check_regraft(tree, node, new_parent)
+        return self._regraft_edge(tree, node, new_parent)
+
+    def regraft_many(self, app_id: int, moves, *, strict: bool = True) -> list[tuple[int, int]]:
+        """Batched placement re-graft: apply ``(node, new_parent)`` moves
+        in input order, node-for-node identical to calling :meth:`regraft`
+        in a loop (the oracle; tests/test_placement.py).
+
+        Independent batches — the common case, since the placement engine
+        only offers attachment points outside every mover's subtree — are
+        validated with ONE vectorized ``paths_matrix`` pass: if no mover
+        appears on any target's root path, every target's ancestry is
+        invariant under the whole batch, so all sequential cycle checks
+        are guaranteed to pass and the per-move walks are skipped.
+        Interacting batches fall back to sequential validation; with
+        ``strict=False`` invalid moves are skipped instead of raising.
+        Returns the list of applied ``(node, new_parent)`` pairs."""
+        tree = self.trees[app_id]
+        pairs = [(int(n), int(p)) for n, p in moves]
+        if not pairs:
+            return []
+        nodes = np.asarray([n for n, _ in pairs], np.int64)
+        targets = np.asarray([p for _, p in pairs], np.int64)
+        fast = len(np.unique(nodes)) == len(nodes)
+        if fast:
+            try:
+                mat = tree.paths_matrix(targets)
+            except (KeyError, RuntimeError):
+                fast = False
+            else:
+                fast = not np.isin(mat, nodes).any() and all(
+                    n != tree.root and n in tree.parent for n in nodes.tolist()
+                )
+        if fast:
+            for n, p in pairs:
+                self._regraft_edge(tree, n, p)
+            return pairs
+        applied: list[tuple[int, int]] = []
+        for n, p in pairs:
+            try:
+                self._check_regraft(tree, n, p)
+            except (KeyError, ValueError):
+                if strict:
+                    raise
+                continue
+            self._regraft_edge(tree, n, p)
+            applied.append((n, p))
+        return applied
+
+    def unsubscribe_one(self, app_id: int, node: int) -> None:
+        """Scalar LEAVE with relay splice — the oracle for
+        :meth:`unsubscribe_many`.  A leaving interior node hands its
+        children to its parent (in child order, through the shared
+        re-graft primitive) and is then pruned exactly like
+        :meth:`unsubscribe`; the root only drops membership (masters
+        leave through recovery, not LEAVE)."""
+        tree = self.trees[app_id]
+        tree.members.discard(node)
+        if node == tree.root or node not in tree.parent:
+            return
+        kids = tree.children.get(node)
+        if kids:
+            p = tree.parent[node]
+            for c in list(kids):
+                self._regraft_edge(tree, c, p)
+        self.unsubscribe(app_id, node)
+
+    def unsubscribe_many(self, app_id: int, nodes) -> None:
+        """Bulk LEAVE (mass-leave / zone-outage repair).  Drops all
+        memberships, splices each leaving relay's children to its current
+        parent in input order (same primitive as :meth:`unsubscribe_one`),
+        then prunes the dead chains with a vectorized fixpoint: each round
+        is one array mask over the candidate set (attached, childless,
+        non-member, non-root), the pruned batch's parents become the next
+        candidates.  Splices commute with deferred pruning (a spliced-out
+        leaver is never again a splice target, and linked-list removals
+        preserve the order of survivors), so the result is node-for-node
+        identical to sequential :meth:`unsubscribe_one` calls
+        (tests/test_placement.py)."""
+        tree = self.trees[app_id]
+        leave = [int(n) for n in nodes]
+        if not leave:
+            return
+        for n in leave:
+            tree.members.discard(n)
+        for n in leave:
+            if n == tree.root or n not in tree.parent:
+                continue
+            kids = tree.children.get(n)
+            if kids:
+                p = tree.parent[n]
+                for c in list(kids):
+                    self._regraft_edge(tree, c, p)
+        cand = np.unique(np.asarray([n for n in leave if n != tree.root], np.int64))
+        while len(cand):
+            cache = tree._ensure_cache()
+            srt, slots_srt = cache["ids_sorted"], cache["slots_sorted"]
+            if len(srt) == 0:
+                break
+            j = np.searchsorted(srt, cand)
+            jj = np.minimum(j, len(srt) - 1)
+            known = (j < len(srt)) & (srt[jj] == cand)
+            cs = slots_srt[jj[known]]
+            ids = cand[known]
+            if len(ids) == 0:
+                break
+            childless = ~(tree._ch_present[cs] & (tree._ch_len[cs] > 0))
+            attached = tree._par[cs] >= 0
+            marr = (
+                np.fromiter(tree.members, np.int64, len(tree.members))
+                if tree.members
+                else np.empty(0, np.int64)
+            )
+            mask = childless & attached & (ids != tree.root) & ~np.isin(ids, marr)
+            doomed = cs[mask]
+            if len(doomed) == 0:
+                break
+            parents = np.unique(tree._ids[tree._par[doomed]])
+            for s in doomed.tolist():
+                nid = int(tree._ids[s])
+                p = tree.parent.pop(nid)
+                tree.children[p].remove(nid)
+            cand = parents
+
     # -- AD tree (advertise / discover) ---------------------------------------
 
     def _ensure_ad_tree(self) -> DataflowTree:

@@ -16,6 +16,23 @@ matrix algebra (the O(log N * Matmul) claim, Fig. 15/16); the Pallas
 Baselines (paper §VII-E): the EuroSys'24 Totoro bandit planner (UCB on
 per-hop delay, congestion-blind) and OPT (knows capacities; greedy
 balanced assignment).  ``nash_regret`` evaluates both per Definition 2.
+
+Live placement (docs/architecture.md "placement layer"): the synthetic
+``CongestionEnv`` demo above never sees the simulator, so the planner
+used to be a figure reproduction while chronic stragglers sat as
+aggregators on hot paths.  ``PlacementEngine`` is the same congestion
+game played against *measured* state: per-uplink occupancy and byte
+ledgers from the ``EventCore``, per-worker defer/deadline attribution
+from ``fl/selection.py``, and per-app fairness snapshots.  Each replan
+is one ε-best-response step — the OPT planner's greedy marginal-reward
+rule, computed exactly from the live hop costs instead of bandit
+samples, with a multiplicative-improvement hysteresis (``improve``)
+playing ε.  The cost model is ``tree_path_costs``: per-node commit and
+download path costs accumulated root-down over the array-backed
+``DataflowTree``'s cached BFS levels — ONE array pass per level per
+replan, the same treatment the schedules got in PR 7.  The per-node
+Python walk survives as ``tree_path_costs_scalar``, the exactness
+oracle (tests/test_placement.py asserts float-for-float equality).
 """
 from __future__ import annotations
 
@@ -253,3 +270,298 @@ def run_planner(planner, env: CongestionEnv, episodes: int, *, seed: int = 1, ev
         jax.nn.one_hot(planner.sample_actions(jax.random.key(99)), env.num_paths).mean((0, 1))
     )
     return series
+
+
+# ---------------------------------------------------------------------------
+# live placement: measured-telemetry best response over the actual trees
+
+
+def tree_path_costs(tree, rows, cap, occ, *, base_ms, down_mbit, up_mbit):
+    """Vectorized commit/download path costs over an array-backed tree.
+
+    ``rows[s]`` maps tree slot ``s`` to its core uplink row; ``cap``/``occ``
+    are the per-uplink capacity (Mbps) and measured occupancy arrays from
+    the event core's congestion ledger.  A node's prospective fair share on
+    its own uplink is ``cap / (1 + occ)`` (its flow joins whatever is
+    already there), so the per-slot hop costs are
+
+        hc_up[s]   = base_ms + 1e3 * up_mbit   / max(share[s], eps)
+        hc_down[s] = base_ms + 1e3 * down_mbit / max(share[s], eps)
+
+    and the path costs accumulate root-down over the cached BFS levels —
+    one array pass per level, no per-node Python (the replan hot path):
+
+        up[s]   = hc_up[s] + up[parent]        (commit: s -> root)
+        down[s] = down[parent] + hc_down[parent]  (broadcast: root -> s)
+
+    Returns ``(up, down, hc_up, hc_down)`` as float64 arrays of length
+    ``tree._n``; detached slots keep ``+inf`` path costs.  The retained
+    per-node oracle is :func:`tree_path_costs_scalar`; the two-operand
+    accumulation order above is chosen so parity is EXACT float equality.
+    """
+    cache = tree._ensure_cache()
+    n = tree._n
+    r = np.asarray(rows)
+    share = np.asarray(cap, np.float64)[r] / np.maximum(1.0 + np.asarray(occ, np.float64)[r], 1.0)
+    hc_up = base_ms + 1e3 * up_mbit / np.maximum(share, 1e-9)
+    hc_down = base_ms + 1e3 * down_mbit / np.maximum(share, 1e-9)
+    up = np.full(n, np.inf)
+    down = np.full(n, np.inf)
+    rs = cache["root_s"]
+    up[rs] = 0.0
+    down[rs] = 0.0
+    for lev in cache["levels"][1:]:
+        ps = tree._par[lev]
+        up[lev] = hc_up[lev] + up[ps]
+        down[lev] = down[ps] + hc_down[ps]
+    return up, down, hc_up, hc_down
+
+
+def tree_path_costs_scalar(tree, rows, cap, occ, *, base_ms, down_mbit, up_mbit, nodes):
+    """Per-node Python cost sweep — the pre-refactor model, retained as the
+    exactness oracle for :func:`tree_path_costs` (tests/test_placement.py
+    asserts float-for-float equality).  Walks each node's ``path_to_root``
+    and accumulates hop costs top-down in the same two-operand order as the
+    vectorized level pass."""
+    cap = np.asarray(cap, np.float64)
+    occ = np.asarray(occ, np.float64)
+    out_up, out_down = [], []
+    for node in nodes:
+        path = tree.path_to_root(int(node))  # node .. root
+        u = 0.0
+        dn = 0.0
+        for child, par in zip(reversed(path[:-1]), reversed(path[1:])):
+            cs = tree._slot[child]
+            ps = tree._slot[par]
+            sc = cap[rows[cs]] / max(1.0 + occ[rows[cs]], 1.0)
+            sp = cap[rows[ps]] / max(1.0 + occ[rows[ps]], 1.0)
+            u = (base_ms + 1e3 * up_mbit / max(sc, 1e-9)) + u
+            dn = dn + (base_ms + 1e3 * down_mbit / max(sp, 1e-9))
+        out_up.append(u)
+        out_down.append(dn)
+    return np.asarray(out_up, np.float64), np.asarray(out_down, np.float64)
+
+
+@dataclass(frozen=True)
+class Move:
+    """One planned re-graft: ``node`` (with its subtree) leaves
+    ``old_parent`` for ``new_parent``; costs are the measured commit+
+    download path cost before the move and the engine's estimate after."""
+
+    node: int
+    old_parent: int
+    new_parent: int
+    cost_before: float
+    cost_est: float
+
+
+class PlacementEngine:
+    """Live utility-aware placement: Algorithm 1's congestion game played
+    against measured state instead of bandit samples.
+
+    Each ``plan_tree`` call is one ε-best-response step of the OPT
+    planner's greedy marginal-reward rule: the costliest (or
+    selector-flagged) members are offered the lowest-cost attachment
+    points, and a move is emitted only when the estimated cost drops
+    below ``improve`` × the measured cost (the hysteresis playing ε, so
+    the greedy dynamics settle instead of oscillating).  The estimate
+    for re-grafting ``w`` under ``p`` decomposes as
+
+        cost(w under p) = hc_up[w] + (up[p] + down[p] + hc_down[p])
+
+    whose second term is mover-independent — so candidate scoring is one
+    vectorized pass and each mover takes the first admissible candidate.
+
+    The engine is pure policy: the scheduler feeds it telemetry
+    (occupancy, uplink bytes, defer/deadline flags via :meth:`flag`) and
+    applies its moves through ``Forest.regraft_many``, pricing the JOIN
+    control traffic on the simulation clock.  ``spike_jain`` /
+    ``spike_occupancy`` / ``min_interval_ms`` configure the scheduler's
+    replan triggers (docs/architecture.md "placement layer").
+    """
+
+    def __init__(
+        self,
+        *,
+        max_moves: int = 4,
+        improve: float = 0.9,
+        candidate_k: int = 8,
+        straggler_factor: float = 1.25,
+        per_parent: int = 2,
+        max_fanout: int = 6,
+        min_interval_ms: float = 250.0,
+        cooldown_ms: float = 1000.0,
+        join_bytes: float = 4096.0,
+        spike_occupancy: float = 6.0,
+        spike_jain: float = 0.7,
+    ):
+        if max_moves < 0 or candidate_k < 1 or per_parent < 1 or max_fanout < 1:
+            raise ValueError(
+                "max_moves >= 0, candidate_k >= 1, per_parent >= 1, max_fanout >= 1 required"
+            )
+        if not 0.0 < improve <= 1.0:
+            raise ValueError("improve must be in (0, 1]")
+        self.max_moves = int(max_moves)
+        self.improve = float(improve)
+        self.candidate_k = int(candidate_k)
+        self.straggler_factor = float(straggler_factor)
+        self.per_parent = int(per_parent)
+        self.max_fanout = int(max_fanout)
+        self.min_interval_ms = float(min_interval_ms)
+        self.cooldown_ms = float(cooldown_ms)
+        self.join_bytes = float(join_bytes)
+        self.join_mbit = float(join_bytes) * 8e-6
+        self.spike_occupancy = float(spike_occupancy)
+        self.spike_jain = float(spike_jain)
+        self.flagged: dict[tuple[int, int], float] = {}
+        self._last_move: dict[tuple[int, int], float] = {}
+        self.replans = 0
+        self.moves_applied = 0
+
+    def reset(self) -> None:
+        self.flagged.clear()
+        self._last_move.clear()
+        self.replans = 0
+        self.moves_applied = 0
+
+    def flag(self, app_idx: int, worker: int, weight: float = 1.0) -> None:
+        """Telemetry feed: mark ``worker`` as transport-hurt (deferred past
+        deadline, blocklist-bound, …).  Flagged workers move first."""
+        key = (int(app_idx), int(worker))
+        self.flagged[key] = self.flagged.get(key, 0.0) + float(weight)
+
+    def consume_flags(self, app_idx: int) -> dict[int, float]:
+        out = {w: v for (a, w), v in self.flagged.items() if a == app_idx}
+        for w in out:
+            del self.flagged[(app_idx, w)]
+        return out
+
+    def plan_tree(
+        self,
+        tree,
+        *,
+        rows,
+        cap,
+        occ,
+        base_ms: float,
+        down_mbit: float,
+        up_mbit: float,
+        flagged=None,
+        blocked=frozenset(),
+        app_idx: int = 0,
+        now_ms: float = 0.0,
+    ) -> list[Move]:
+        """One best-response step over ``tree``; returns validated moves
+        (cycle-free against the current tree, deterministic order).
+        ``now_ms`` drives the per-node move cooldown: a node re-grafted
+        within the last ``cooldown_ms`` is not moved again, so a churn
+        repair reverting a placement cannot thrash the same worker back
+        and forth every replan."""
+        if self.max_moves == 0 or tree._n <= 1:
+            return []
+        up, down, hc_up, hc_down = tree_path_costs(
+            tree, rows, cap, occ, base_ms=base_ms, down_mbit=down_mbit, up_mbit=up_mbit
+        )
+        cache = tree._ensure_cache()
+        srt, slots_srt = cache["ids_sorted"], cache["slots_sorted"]
+        if len(srt) == 0:
+            return []
+        blocked_arr = (
+            np.asarray(sorted(blocked), np.int64) if blocked else np.empty(0, np.int64)
+        )
+
+        # member slots (vectorized id -> slot over the sorted cache)
+        marr = np.asarray(sorted(tree.members), np.int64)
+        j = np.searchsorted(srt, marr)
+        jj = np.minimum(j, len(srt) - 1)
+        known = (j < len(srt)) & (srt[jj] == marr)
+        mslots = slots_srt[jj[known]]
+        mids = marr[known]
+        good = np.isfinite(up[mslots]) & (mids != tree.root)
+        if len(blocked_arr):
+            good &= ~np.isin(mids, blocked_arr)
+        mslots, mids = mslots[good], mids[good]
+        if len(mids) == 0:
+            return []
+
+        total = up[mslots] + down[mslots]
+        med = float(np.median(total))
+        fl = flagged or {}
+        fw = np.asarray([fl.get(int(w), 0.0) for w in mids], np.float64)
+        cooled = np.asarray(
+            [
+                now_ms - self._last_move.get((app_idx, int(w)), float("-inf"))
+                >= self.cooldown_ms
+                for w in mids
+            ],
+            bool,
+        )
+        eligible = cooled & ((fw > 0.0) | (total >= self.straggler_factor * med))
+        # flagged first, then costliest, id ascending for determinism
+        order = np.lexsort((mids, -total, -(fw > 0.0).astype(np.int64)))
+        movers = [int(i) for i in order if eligible[i]][: self.max_moves]
+        if not movers:
+            return []
+        mover_ids = mids[movers]
+
+        # candidate attachment points: reachable, not blocked, not a mover,
+        # scored by the mover-independent term — one vectorized pass
+        all_slots = np.concatenate(cache["levels"]) if cache["levels"] else np.empty(0, np.int64)
+        score = up[all_slots] + down[all_slots] + hc_down[all_slots]
+        cids = tree._ids[all_slots]
+        ok = ~np.isin(cids, mover_ids)
+        if len(blocked_arr):
+            ok &= ~np.isin(cids, blocked_arr)
+        all_slots, score, cids = all_slots[ok], score[ok], cids[ok]
+        if len(cids) == 0:
+            return []
+        pick = np.lexsort((cids, score))[: self.candidate_k]
+        cand_slots = all_slots[pick]
+        cand_ids = cids[pick]
+        cand_score = score[pick]
+        # current child counts: a hub cap — piling movers onto one parent
+        # both re-creates the contention being planned away and makes
+        # that parent a single point of failure under churn
+        cand_kids = np.where(
+            tree._ch_present[cand_slots], tree._ch_len[cand_slots], 0
+        ).astype(np.int64)
+
+        moves: list[Move] = []
+        assigned: dict[int, int] = {}
+        parent = tree.parent
+        root = tree.root
+        for mi in movers:
+            w = int(mids[mi])
+            ws = int(mslots[mi])
+            base_cost = float(total[mi])
+            chosen = None
+            for ci, (cid, sc) in enumerate(zip(cand_ids.tolist(), cand_score.tolist())):
+                cid = int(cid)
+                if assigned.get(cid, 0) >= self.per_parent:
+                    continue
+                if int(cand_kids[ci]) + assigned.get(cid, 0) >= self.max_fanout:
+                    continue
+                est = float(hc_up[ws]) + float(sc)
+                if est > self.improve * base_cost:
+                    continue
+                # cycle guard: the candidate must not sit in w's subtree
+                cur, inside = cid, False
+                while cur != root:
+                    if cur == w:
+                        inside = True
+                        break
+                    cur = parent[cur]
+                if inside:
+                    continue
+                chosen = (cid, est)
+                break  # candidates are score-sorted: first admissible wins
+            if chosen is None:
+                continue
+            cid, est = chosen
+            old_parent = int(parent[w])
+            if cid == old_parent:
+                continue
+            moves.append(Move(w, old_parent, cid, base_cost, est))
+            assigned[cid] = assigned.get(cid, 0) + 1
+            self._last_move[(app_idx, w)] = float(now_ms)
+        return moves

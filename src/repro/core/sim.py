@@ -175,6 +175,23 @@ class DeferRecord:
         return self.end_ms - self.start_ms
 
 
+@dataclass(frozen=True)
+class ReplanRecord:
+    """One placement replan as it ran on the clock (telemetry).
+
+    ``trigger`` names what marked the planner dirty (``bootstrap`` /
+    ``churn`` / ``defer`` / ``selector`` / ``contention``); ``moves`` is
+    the applied re-graft set as ``(app_idx, node, old_parent,
+    new_parent)`` tuples; ``cost_ms`` is the total on-clock price of the
+    JOIN control traffic (re-grafts are not free)."""
+
+    time_ms: float
+    trigger: str
+    moves: tuple
+    cost_ms: float
+    control_bytes: float
+
+
 class _Flow:
     """One in-flight hop transfer on a sender's uplink (fluid model)."""
 
@@ -267,6 +284,10 @@ class EventCore:
         # optional per-dispatch hook (event-count-triggered congestion
         # resampling); None keeps the dispatch loop branch nearly free
         self._tick_hook: Callable[[], None] | None = None
+        # per-uplink delivered-bytes ledger: credited by schedulers on
+        # commit/control completions (only when a placement engine is
+        # attached), read by the engine's reward model
+        self.uplink_bytes = np.zeros(len(nodes), np.float64)
 
     def _reset_clock(self) -> None:
         self.now = 0.0
@@ -285,6 +306,7 @@ class EventCore:
         self._cohorts.clear()
         self._cohort_of.clear()
         self._armed.clear()
+        self.uplink_bytes[:] = 0.0
 
     def sender_indices(self, nodes) -> np.ndarray:
         return np.asarray([self._node_idx[n] for n in nodes], np.int32)
@@ -1008,7 +1030,9 @@ class AsyncBufferScheduler(EventCore):
         hot_threshold: int = 4,
         resample_every: float | None = None,
         resample_events: int | None = None,
+        resample_target_error: float | None = None,
         app_compression=None,
+        placement=None,
     ):
         super().__init__(
             system, handles, model_bytes=model_bytes, base_ms=base_ms,
@@ -1029,11 +1053,39 @@ class AsyncBufferScheduler(EventCore):
             raise ValueError(f"resample_every must be > 0 ms, got {resample_every!r}")
         if resample_events is not None and not resample_events > 0:
             raise ValueError(f"resample_events must be > 0, got {resample_events!r}")
+        if resample_target_error is not None:
+            if resample_every is None and resample_events is None:
+                raise ValueError(
+                    "resample_target_error adapts the resample cadence and "
+                    "needs resample_every and/or resample_events as the base"
+                )
+            if not resample_target_error > 0:
+                raise ValueError(
+                    f"resample_target_error must be > 0, got {resample_target_error!r}"
+                )
         self.cohort = bool(cohort)
         self.congestion_mode = congestion_mode
         self.hot_threshold = int(hot_threshold)
         self.resample_every = None if resample_every is None else float(resample_every)
         self.resample_events = None if resample_events is None else int(resample_events)
+        self.resample_target_error = (
+            None if resample_target_error is None else float(resample_target_error)
+        )
+        # constructor-time cadence, restored at each run() so adaptation
+        # never leaks across runs
+        self._resample_every0 = self.resample_every
+        self._resample_events0 = self.resample_events
+        # live placement engine (docs/architecture.md "placement layer");
+        # None keeps every hook dormant and the event trace byte-identical
+        from .pathplan import PlacementEngine
+
+        if placement is True:
+            placement = PlacementEngine()
+        if placement is not None and not isinstance(placement, PlacementEngine):
+            raise TypeError(
+                f"placement must be None or a PlacementEngine, got {placement!r}"
+            )
+        self.placement = placement
         self.compute_ms = compute_ms
         self.trainer = trainer
         self.barrier = barrier
@@ -1113,6 +1165,16 @@ class AsyncBufferScheduler(EventCore):
         # key -> (t_priced, t_end, down_idx, up_idx, compute_ms)
         self._cold_span: dict[tuple[int, int], tuple] = {}
         self._resample_count = 0
+        # adaptive-cadence controller state (resample_target_error)
+        self.resample_log: list[tuple] = []  # (t, err_ema, every, events)
+        self._resample_err: float | None = None
+        # placement replan state (PR 5's lazy-invalidation pattern: triggers
+        # only mark dirty; the replan itself runs at the next apply/churn
+        # boundary once min_interval_ms has passed)
+        self.replan_log: list[ReplanRecord] = []
+        self._replan_dirty: str | None = None
+        self._last_replan_ms = float("-inf")
+        self.control_bytes = 0.0
 
     def _per_app(self, value, handle_attr: str, default):
         """Resolve a per-app knob: explicit arg (scalar broadcast or
@@ -1291,6 +1353,7 @@ class AsyncBufferScheduler(EventCore):
         resample is a pure no-op and the apply/churn trace stays
         identical to exact mode."""
         self._resample_count += 1
+        drift_sum, drift_n = 0.0, 0
         for key in list(self._cold_span):
             span = self._cold_span.get(key)
             hops = self._cold_hops.get(key)
@@ -1305,8 +1368,10 @@ class AsyncBufferScheduler(EventCore):
                 + self._sampled_leg_ms(up, self._commit_mbit[key[0]])
             )
             np.add.at(self._cold_load, hops, 1)
+            drift_n += 1
             if new_total == total:
                 continue  # unchanged price: keep the event (no seq churn)
+            drift_sum += abs(new_total - total) / total
             new_end = t + (t1 - t) / (t1 - t0) * new_total
             old_ev = self._pending_ev.get(key)
             if old_ev is not None:
@@ -1316,6 +1381,34 @@ class AsyncBufferScheduler(EventCore):
                 ai, new_end - t, lambda tt, ai=ai, w=w: self._finish_cold_cycle(ai, w, tt)
             )
             self._cold_span[key] = (t, new_end, down, up, fixed, new_total)
+        if self.resample_target_error is not None and drift_n:
+            self._adapt_resample_cadence(t, drift_sum / drift_n)
+
+    def _adapt_resample_cadence(self, t: float, err: float) -> None:
+        """Adaptive cadence: the measured relative price drift per
+        resample IS the apply-time error the fixed cadence only measured
+        — so control it.  Drift above ``resample_target_error`` halves
+        the interval (more refreshes), drift below half the target
+        relaxes it by 1.25x; both knobs stay within [base/8, 4*base] of
+        their constructor values.  A 50/50 EMA smooths bursts.  Off
+        (target None) never touches the cadence, keeping traces
+        identical."""
+        ema = err if self._resample_err is None else 0.5 * err + 0.5 * self._resample_err
+        self._resample_err = ema
+        tgt = self.resample_target_error
+        scale = 0.5 if ema > tgt else (1.25 if ema < 0.5 * tgt else 1.0)
+        if scale != 1.0:
+            if self.resample_every is not None:
+                base = self._resample_every0
+                self.resample_every = float(
+                    min(4.0 * base, max(base / 8.0, self.resample_every * scale))
+                )
+            if self.resample_events is not None:
+                base = self._resample_events0
+                self.resample_events = int(
+                    round(min(4 * base, max(max(1, base // 8), self.resample_events * scale)))
+                )
+        self.resample_log.append((t, ema, self.resample_every, self.resample_events))
 
     def _on_resample_timer(self, t: float) -> None:
         self._resample_cold(t)
@@ -1491,6 +1584,13 @@ class AsyncBufferScheduler(EventCore):
                 self.cancel(rec["deadline_ev"])
             self.defer_log.append(DeferRecord(t0, t, ai, w, relay, forced))
             self._defer_count[ai] += 1
+            if self.placement is not None:
+                # transport deferral observed: flag the worker for
+                # re-placement and mark the planner dirty (lazy — the
+                # replan runs at the next apply/churn boundary)
+                self.placement.flag(ai, w, t - t0)
+                if self._replan_dirty is None:
+                    self._replan_dirty = "defer"
             if self.selector is not None:
                 on_defer = getattr(self.selector, "on_defer", None)
                 if on_defer is not None:
@@ -1538,9 +1638,11 @@ class AsyncBufferScheduler(EventCore):
         # measure accounting granularity at a horizon cut; flow-level
         # byte conservation across re-prices is asserted separately
         # (tests/test_fairness.py on _Flow.delivered_mbit)
-        self._uplink_bytes[ai] += self._commit_bytes[ai] * len(
-            self._path_senders(ai, w, up=True)
-        )
+        up_path = self._path_senders(ai, w, up=True)
+        self._uplink_bytes[ai] += self._commit_bytes[ai] * len(up_path)
+        if self.placement is not None and len(up_path):
+            # per-uplink ledger for the placement engine's reward model
+            np.add.at(self.uplink_bytes, up_path, self._commit_bytes[ai])
         self._pending_ev.pop(key, None)
         self._cycle[key] = self._cycle.get(key, 0) + 1
         self._buffer[ai].append((w, self._version_at_start.pop(key)))
@@ -1597,6 +1699,9 @@ class AsyncBufferScheduler(EventCore):
             parked, self._parked[ai] = sorted(self._parked[ai]), set()
             for w in parked:
                 self._offer_cycle(ai, w)
+        if self.placement is not None:
+            self._check_contention(transport)
+            self._maybe_replan(t)
 
     # -- fairness telemetry ----------------------------------------------------
 
@@ -1638,6 +1743,115 @@ class AsyncBufferScheduler(EventCore):
             "jain_uplink": jain_fairness(tp),
             "deferred_commits": len(self.defer_log),
         }
+
+    # -- live placement (docs/architecture.md "placement layer") ---------------
+
+    def uplink_occupancy(self) -> np.ndarray:
+        """Per-uplink concurrent occupancy (fluid flows + cold cycles) —
+        the congestion ledger the placement engine plans against."""
+        occ = self._cold_load.astype(np.float64)
+        for s, fids in self._flows_by_sender.items():
+            occ[s] += len(fids)
+        return occ
+
+    def _placement_feedback(self, ai: int, w: int, kind: str, magnitude: float) -> None:
+        """Selector -> planner feedback: a transport-hurt worker is
+        flagged for re-placement (``UtilitySelector.placement_hook``)."""
+        self.placement.flag(ai, w, max(float(magnitude), 1.0))
+        if self._replan_dirty is None:
+            self._replan_dirty = "selector"
+
+    def _check_contention(self, transport: dict) -> None:
+        """Apply-time contention-spike trigger: fairness collapse or a
+        pile-up on any single uplink marks the planner dirty."""
+        eng = self.placement
+        if self._replan_dirty is not None:
+            return
+        if transport["jain_uplink"] < eng.spike_jain:
+            self._replan_dirty = "contention"
+            return
+        if self._flows_by_sender or self._cold_load.any():
+            if self.uplink_occupancy().max() >= eng.spike_occupancy:
+                self._replan_dirty = "contention"
+
+    def _maybe_replan(self, t: float) -> None:
+        """PR 5's lazy-invalidation pattern: triggers only mark dirty;
+        the replan itself runs here, rate-limited by the engine's
+        ``min_interval_ms`` so a churn storm costs one replan."""
+        eng = self.placement
+        if eng is None or self._replan_dirty is None:
+            return
+        if t - self._last_replan_ms < eng.min_interval_ms:
+            return
+        trigger, self._replan_dirty = self._replan_dirty, None
+        self._last_replan_ms = t
+        self._replan(t, trigger)
+
+    def _replan(self, t: float, trigger: str) -> None:
+        """One placement episode: plan every live app's tree against the
+        measured occupancy, apply the moves through the forest's batched
+        re-graft, and price the JOIN control traffic on the clock —
+        moved members stall (``_delay_until``) until their JOIN lands,
+        and the control bytes hit the same per-uplink ledger commits do."""
+        eng = self.placement
+        occ = self.uplink_occupancy()
+        all_moves: list[tuple[int, int, int, int]] = []
+        cost_total = 0.0
+        bytes_total = 0.0
+        for ai, h in enumerate(self.handles):
+            if self._done[ai]:
+                continue
+            tree = h.tree
+            try:
+                rows = self.sender_indices_many(tree._ids[: tree._n])
+            except KeyError:
+                continue  # mid-repair transient: a tree node left the overlay
+            moves = eng.plan_tree(
+                tree,
+                rows=rows,
+                cap=self._cap_mbps,
+                occ=occ,
+                base_ms=self.base_ms,
+                down_mbit=self.env.packet_mbit,
+                up_mbit=self._commit_mbit[ai],
+                flagged=eng.consume_flags(ai),
+                blocked=self._failed,
+                app_idx=ai,
+                now_ms=t,
+            )
+            if not moves:
+                continue
+            applied = self.system.forest.regraft_many(
+                tree.app_id, [(m.node, m.new_parent) for m in moves], strict=False
+            )
+            if not applied:
+                continue
+            self._path_cache.clear()  # moved subtrees invalidate memoized routes
+            applied_set = set(applied)
+            for m in moves:
+                if (m.node, m.new_parent) not in applied_set:
+                    continue
+                try:
+                    senders = self._path_senders(ai, m.node, up=True)
+                except KeyError:
+                    senders = np.empty(0, np.int32)
+                join_ms = self.transfer_ms(senders, reduce="sum", mbit=eng.join_mbit)
+                cost_total += join_ms
+                if len(senders):
+                    np.add.at(self.uplink_bytes, senders, eng.join_bytes)
+                    bytes_total += eng.join_bytes * len(senders)
+                if m.node in tree.members and m.node not in self._failed:
+                    key = (ai, m.node)
+                    self._delay_until[key] = max(
+                        self._delay_until.get(key, 0.0), t + join_ms
+                    )
+                all_moves.append((ai, m.node, m.old_parent, m.new_parent))
+        self.control_bytes += bytes_total
+        eng.replans += 1
+        eng.moves_applied += len(all_moves)
+        self.replan_log.append(
+            ReplanRecord(t, trigger, tuple(all_moves), cost_total, bytes_total)
+        )
 
     # -- churn -----------------------------------------------------------------
 
@@ -1708,6 +1922,10 @@ class AsyncBufferScheduler(EventCore):
             # idlers lost the commit that would have released them
             for ai in range(len(self.handles)):
                 self._kick(ai, t)
+            if self.placement is not None:
+                if self._replan_dirty is None:
+                    self._replan_dirty = "churn"
+                self._maybe_replan(t)
             self.schedule(
                 self.churn.downtime_ms,
                 lambda tt, victims=victims, info=rejoin_info: self._on_churn_rejoin(
@@ -1765,6 +1983,10 @@ class AsyncBufferScheduler(EventCore):
                     self._offer_cycle(ai, n)
         if rejoined:
             self.churn_log.append(ChurnRecord(t, "rejoin", tuple(rejoined)))
+            if self.placement is not None:
+                if self._replan_dirty is None:
+                    self._replan_dirty = "churn"
+                self._maybe_replan(t)
 
     # -- driver ----------------------------------------------------------------
 
@@ -1822,6 +2044,21 @@ class AsyncBufferScheduler(EventCore):
         self.churn_log = []
         self.defer_log = []
         self.fairness_log = []
+        self.replan_log = []
+        self.resample_log = []
+        self._replan_dirty = None
+        self._last_replan_ms = float("-inf")
+        self.control_bytes = 0.0
+        self._resample_err = None
+        self.resample_every = self._resample_every0
+        self.resample_events = self._resample_events0
+        if self.placement is not None:
+            self.placement.reset()
+            self._replan_dirty = "bootstrap"
+            if self.selector is not None and hasattr(self.selector, "placement_hook"):
+                # close the selection loop: transport-deferred workers
+                # are handed to the planner instead of blocklisted
+                self.selector.placement_hook = self._placement_feedback
         self.controllers = [
             AdaptiveKController(**{"k_init": self.buffer_k[ai], **self.adaptive_kwargs})
             if self.adaptive
@@ -1837,10 +2074,11 @@ class AsyncBufferScheduler(EventCore):
         self._schedule_churn()
         self._tick_hook = None
         if self.resample_events is not None:
-            every = self.resample_events
-
+            # reads the attribute each tick: the adaptive-cadence
+            # controller mutates it mid-run (a fixed cadence reads the
+            # same value every time, so this stays behavior-identical)
             def _tick() -> None:
-                if self.events_dispatched % every == 0:
+                if self.events_dispatched % self.resample_events == 0:
                     self._resample_cold(self.now)
 
             self._tick_hook = _tick

@@ -244,6 +244,8 @@ def run_async(
     hot_threshold: int = 4,
     resample_every: float | None = None,
     resample_events: int | None = None,
+    resample_target_error: float | None = None,
+    placement=None,
     max_events: int = 1_000_000,
 ) -> dict:
     """Wire an ``AsyncTrainer`` under an ``AsyncBufferScheduler`` and run
@@ -279,7 +281,15 @@ def run_async(
     exact, and ``resample_every`` (simulated ms) / ``resample_events``
     (dispatch count) periodically re-price in-flight cold cycles against
     current loads; ``max_events`` raises the event budget for large
-    scale runs."""
+    scale runs.  ``resample_target_error`` makes the sampled-congestion
+    cadence adaptive (tighten/relax around a target apply-time drift).
+
+    ``placement`` (a ``core.pathplan.PlacementEngine`` or ``True`` for
+    defaults) turns on live utility-aware placement: replans on churn /
+    defer / contention triggers, re-grafts through the forest's batched
+    moves, and feeds selector defer-attribution back into the planner
+    (docs/architecture.md "placement layer").  ``None`` (default) keeps
+    static placement with byte-identical traces."""
     from repro.core.sim import AsyncBufferScheduler
 
     trainer = AsyncTrainer(
@@ -310,6 +320,8 @@ def run_async(
         hot_threshold=hot_threshold,
         resample_every=resample_every,
         resample_events=resample_events,
+        resample_target_error=resample_target_error,
+        placement=placement,
     )
     events = sched.run(applies, max_events=max_events)
     return {

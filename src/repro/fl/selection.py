@@ -166,6 +166,18 @@ class UtilitySelector:
         self.rng = np.random.default_rng(seed)
         self._stats: dict[tuple[int, int], _ClientStats] = {}
         self.parked_total = 0  # declined offers (telemetry)
+        # placement loop (set by AsyncBufferScheduler when a
+        # PlacementEngine is attached): called as hook(app_idx, worker,
+        # kind, magnitude_ms).  With a hook present, a blocklist-bound
+        # worker whose slowness is transport-attributed (defer EMA
+        # dominates its cycle) is handed to the planner for re-placement
+        # INSTEAD of being blocklisted — moving it beats benching it.
+        # hook=None keeps the legacy policy bit-for-bit.
+        self.placement_hook = None
+        self.replaced_total = 0  # blocklists converted to re-placements
+        # defer share of the cycle EMA above which a miss is considered
+        # transport-caused rather than compute-caused
+        self.defer_fraction = 0.5
 
     # -- internals -------------------------------------------------------------
 
@@ -222,7 +234,22 @@ class UtilitySelector:
         if cycle_ms > self.deadline_ms:
             st.misses += 1
             if st.misses >= self.blocklist_after:
-                st.block_offers = self.blocklist_rounds * st.misses
+                if (
+                    self.placement_hook is not None
+                    and st.defer_ms >= self.defer_fraction * float(st.cycle_ms)
+                ):
+                    # transport-deferred, not slow: re-place instead of
+                    # blocklisting; misses reset so the worker re-earns
+                    # a block only if it stays late AFTER the move
+                    self.placement_hook(app_idx, worker, "transport", float(st.defer_ms))
+                    self.replaced_total += 1
+                    st.misses = 0
+                else:
+                    st.block_offers = self.blocklist_rounds * st.misses
+                    if self.placement_hook is not None:
+                        # deadline-attributed block: still tell the
+                        # planner, a better path may yet shorten cycles
+                        self.placement_hook(app_idx, worker, "deadline", float(cycle_ms))
         else:
             st.misses = max(0, st.misses - 1)
 

@@ -1,0 +1,449 @@
+"""Live placement loop: planner → forest re-graft → event core → selector.
+
+Locks down the PR-9 exactness contracts:
+
+- ``placement=None`` (and omitting the knob entirely) is the static
+  baseline: exact ApplyEvent/ChurnRecord/fairness equality at M=16
+  under churn, and a ``max_moves=0`` engine — the loop wired up but
+  forbidden to move anything — is trace-identical too (the hooks are
+  pay-for-what-you-use);
+- the vectorized cost sweep (`tree_path_costs`, one array pass per
+  level) equals the retained per-node Python oracle float-for-float;
+- ``regraft_many`` / ``unsubscribe_many`` are node-for-node identical
+  to their scalar oracles (``regraft`` / ``unsubscribe_one`` loops),
+  including under membership churn, duplicates, and invalid moves;
+- replans are deterministic under fixed seeds and priced on the clock;
+- the adaptive resample cadence tightens/relaxes within its bounds and
+  is a no-op when off;
+- selector feedback: with a placement hook, transport-deferred workers
+  are handed to the planner instead of blocklisted; without one, the
+  legacy blocklist policy is untouched.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.common import build_system
+from repro.core.forest import Forest
+from repro.core.nodeid import IdSpace
+from repro.core.overlay import MultiRingOverlay
+from repro.core.pathplan import (
+    Move,
+    PlacementEngine,
+    tree_path_costs,
+    tree_path_costs_scalar,
+)
+from repro.core.sim import AsyncBufferScheduler, ChurnModel
+from repro.fl import async_engine
+from repro.fl.selection import UtilitySelector
+
+
+# -- fixtures -----------------------------------------------------------------
+
+
+def _make_handles(sys_, nodes, rng, m, w, tag="p"):
+    handles = []
+    for a in range(m):
+        h = sys_.CreateTree(f"plc{tag}-{m}-{a}")
+        for node in rng.choice(nodes, size=w, replace=False):
+            sys_.Subscribe(h.app_id, int(node))
+        handles.append(h)
+    return handles
+
+
+def _run_sched(m=16, *, seed=0, applies=2, workers=6, placement="omit",
+               selector=None, **kw):
+    """Timing-only scheduler run (no jax data plane) with churn."""
+    sys_, nodes, rng = build_system(n_nodes=200, zones=4, seed=seed)
+    handles = _make_handles(sys_, nodes, rng, m, workers)
+    churn = ChurnModel(period_ms=180.0, downtime_ms=360.0, group_size=2,
+                      seed=seed + 1)
+    kwargs = dict(
+        model_bytes=2e5,
+        compute_ms=async_engine.worker_compute_fn(30.0, 4.0, seed=seed),
+        buffer_k=3, churn=churn, selector=selector,
+    )
+    kwargs.update(kw)
+    if placement != "omit":
+        kwargs["placement"] = placement
+    sched = AsyncBufferScheduler(sys_, handles, **kwargs)
+    sched.run(applies, max_events=2_000_000)
+    return sched
+
+
+def _trace(sched):
+    return (list(sched.history), list(sched.churn_log), list(sched.fairness_log))
+
+
+def _build_forest(n=900, seed=0, subs=250):
+    space = IdSpace(zone_bits=3, suffix_bits=24)
+    ov = MultiRingOverlay(space, base_bits=4, seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        ov.join_random(int(rng.integers(0, 8)), coord=rng.uniform(0, 100, 2))
+    f = Forest(ov)
+    tree = f.create_tree("plc-app")
+    picks = rng.choice(ov.nodes(), size=subs, replace=False)
+    f.subscribe_many(tree.app_id, picks)
+    return f, tree, rng
+
+
+def full_fingerprint(tree):
+    """Everything observable about a tree, including dict/list order."""
+    return (
+        tree.root,
+        dict(tree.parent),
+        list(tree.parent),
+        {p: list(tree.children[p]) for p in tree.children},
+        list(tree.children),
+        sorted(tree.members),
+        tree.aggregation_schedule(),
+        tree.broadcast_schedule(),
+        [sorted(l) for l in tree.levels()],
+    )
+
+
+# -- placement=None trace identity (M=16, under churn) ------------------------
+
+
+def test_placement_none_trace_identity_m16():
+    legacy = _run_sched(16, placement="omit")
+    off = _run_sched(16, placement=None)
+    assert _trace(legacy) == _trace(off) and legacy.history
+    assert off.replan_log == [] and off.control_bytes == 0.0
+    assert not off.uplink_bytes.any()  # ledger only charged when placed
+
+
+def test_max_moves_zero_engine_is_trace_identical():
+    """The full loop armed but forbidden to move: every trigger fires,
+    every plan returns empty, and the event trace must not shift."""
+    off = _run_sched(16, placement=None)
+    armed = _run_sched(16, placement=PlacementEngine(max_moves=0))
+    assert _trace(off) == _trace(armed)
+    assert armed.replan_log and all(r.moves == () for r in armed.replan_log)
+    assert armed.control_bytes == 0.0
+
+
+def test_placement_knob_validated():
+    with pytest.raises(TypeError):
+        _run_sched(2, placement=object())
+    sched = _run_sched(2, placement=True, applies=1)
+    assert isinstance(sched.placement, PlacementEngine)
+
+
+# -- vectorized cost sweep == per-node Python oracle --------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_vectorized_cost_sweep_matches_scalar_oracle(seed):
+    f, tree, rng = _build_forest(seed=seed)
+    n_rows = 64
+    rows = rng.integers(0, n_rows, size=tree._n)
+    cap = rng.uniform(20.0, 100.0, size=n_rows)
+    occ = rng.integers(0, 6, size=n_rows).astype(np.float64)
+    kw = dict(base_ms=5.0, down_mbit=1.6, up_mbit=2.4)
+    up, down, hc_up, hc_down = tree_path_costs(tree, rows, cap, occ, **kw)
+    nodes = sorted(tree.nodes())
+    s_up, s_down = tree_path_costs_scalar(tree, rows, cap, occ, nodes=nodes, **kw)
+    slots = np.asarray([tree._slot[n] for n in nodes])
+    # EXACT float equality: the two sweeps accumulate in the same
+    # two-operand order, so parity is ==, not approx
+    assert np.array_equal(up[slots], s_up)
+    assert np.array_equal(down[slots], s_down)
+    assert np.all(np.isfinite(up[slots])) and np.all(hc_up[slots] > 0)
+    # the root costs nothing to reach from itself
+    rs = tree._slot[tree.root]
+    assert up[rs] == 0.0 and down[rs] == 0.0
+
+
+def test_cost_sweep_root_detached_slots_are_inf():
+    f, tree, rng = _build_forest(n=200, seed=3, subs=40)
+    # force a detached slot by pruning a leaf
+    leaf = next(n for n in tree.members
+                if n != tree.root and not tree.children.get(n))
+    f.unsubscribe(tree.app_id, leaf)
+    rows = np.zeros(tree._n, np.int64)
+    up, down, _, _ = tree_path_costs(
+        tree, rows, np.array([50.0]), np.array([0.0]),
+        base_ms=5.0, down_mbit=1.0, up_mbit=1.0,
+    )
+    if leaf in tree._slot and leaf not in tree.parent:
+        s = tree._slot[leaf]
+        assert np.isinf(up[s]) and np.isinf(down[s])
+
+
+# -- re-graft oracle parity ----------------------------------------------------
+
+
+def _random_moves(tree, rng, k=40):
+    pool = [n for n in tree.nodes() if n != tree.root]
+    targets = list(tree.nodes())
+    return [
+        (int(rng.choice(pool)), int(rng.choice(targets)))
+        for _ in range(min(k, len(pool)))
+    ]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_regraft_many_matches_sequential_oracle(seed):
+    fa, ta, rng = _build_forest(seed=seed)
+    fb, tb, _ = _build_forest(seed=seed)
+    assert full_fingerprint(ta) == full_fingerprint(tb)
+    # churn the trees identically first: some members leave mid-plan
+    leavers = [int(n) for n in rng.choice(sorted(ta.members), size=20, replace=False)
+               if int(n) != ta.root]
+    fa.unsubscribe_many(ta.app_id, leavers)
+    for n in leavers:
+        fb.unsubscribe_one(tb.app_id, n)
+    moves = _random_moves(ta, rng)
+    applied_bulk = fa.regraft_many(ta.app_id, moves, strict=False)
+    applied_seq = []
+    for n, p in moves:
+        try:
+            fb.regraft(tb.app_id, n, p)
+        except (KeyError, ValueError):
+            continue
+        applied_seq.append((n, p))
+    assert applied_bulk == applied_seq
+    assert full_fingerprint(ta) == full_fingerprint(tb)
+
+
+def test_regraft_validation():
+    f, tree, rng = _build_forest(n=300, seed=5, subs=60)
+    # pick an interior node with a child: moving it under its own
+    # descendant must raise (cycle guard)
+    interior = next(n for n in tree.nodes()
+                    if n != tree.root and tree.children.get(n))
+    child = tree.children[interior][0]
+    with pytest.raises(ValueError, match="cycle"):
+        f.regraft(tree.app_id, interior, child)
+    with pytest.raises(ValueError, match="root"):
+        f.regraft(tree.app_id, tree.root, interior)
+    with pytest.raises(KeyError):
+        f.regraft(tree.app_id, -12345, tree.root)
+    # strict=False skips exactly the invalid ones
+    ok_target = tree.root
+    applied = f.regraft_many(
+        tree.app_id, [(interior, child), (interior, ok_target)], strict=False
+    )
+    assert applied == [(interior, ok_target)]
+    with pytest.raises(ValueError):
+        f.regraft_many(tree.app_id, [(interior, child)], strict=True)
+
+
+@pytest.mark.parametrize("seed,n_leave", [(0, 1), (0, 30), (1, 80), (2, 150)])
+def test_unsubscribe_many_matches_sequential_oracle(seed, n_leave):
+    fa, ta, rng = _build_forest(seed=seed)
+    fb, tb, _ = _build_forest(seed=seed)
+    leave = [int(n) for n in rng.choice(sorted(ta.members), size=n_leave,
+                                        replace=False)]
+    leave += leave[: max(1, n_leave // 4)]  # duplicates must be no-ops
+    leave.append(ta.root)  # root only drops membership
+    fa.unsubscribe_many(ta.app_id, leave)
+    for n in leave:
+        fb.unsubscribe_one(tb.app_id, n)
+    assert full_fingerprint(ta) == full_fingerprint(tb)
+    # leavers are gone from membership; surviving members still route
+    assert not (set(leave) - {ta.root}) & ta.members
+    for n in list(ta.members)[:20]:
+        assert ta.path_to_root(n)[-1] == ta.root
+
+
+def test_unsubscribe_many_interleaved_with_regrafts():
+    """The placement loop's actual sequence: re-graft, then mass-leave,
+    then re-graft again — stays oracle-identical throughout."""
+    fa, ta, rng = _build_forest(seed=7)
+    fb, tb, _ = _build_forest(seed=7)
+    for round_ in range(3):
+        moves = _random_moves(ta, rng, k=15)
+        a = fa.regraft_many(ta.app_id, moves, strict=False)
+        b = []
+        for n, p in moves:
+            try:
+                fb.regraft(tb.app_id, n, p)
+            except (KeyError, ValueError):
+                continue
+            b.append((n, p))
+        assert a == b
+        leave = [int(n) for n in
+                 rng.choice(sorted(ta.members), size=10, replace=False)]
+        fa.unsubscribe_many(ta.app_id, leave)
+        for n in leave:
+            fb.unsubscribe_one(tb.app_id, n)
+        assert full_fingerprint(ta) == full_fingerprint(tb)
+
+
+# -- replan determinism + on-clock pricing ------------------------------------
+
+
+def test_replan_determinism_and_pricing():
+    a = _run_sched(8, placement=PlacementEngine(), applies=2)
+    b = _run_sched(8, placement=PlacementEngine(), applies=2)
+    assert _trace(a) == _trace(b)
+    assert a.replan_log == b.replan_log and a.replan_log
+    assert a.control_bytes == b.control_bytes
+    triggers = {r.trigger for r in a.replan_log}
+    assert triggers <= {"bootstrap", "churn", "defer", "selector", "contention"}
+    assert "bootstrap" in triggers  # run() always seeds one replan
+    moved = [r for r in a.replan_log if r.moves]
+    if moved:  # applied moves are priced, not free
+        assert all(r.cost_ms > 0 and r.control_bytes > 0 for r in moved)
+        assert a.control_bytes == pytest.approx(
+            sum(r.control_bytes for r in a.replan_log)
+        )
+        assert a.uplink_bytes.any()
+    eng = a.placement
+    assert eng.replans == len(a.replan_log)
+    assert eng.moves_applied == sum(len(r.moves) for r in a.replan_log)
+
+
+def test_replan_rate_limited_by_min_interval():
+    slow = _run_sched(8, placement=PlacementEngine(min_interval_ms=1e7), applies=2)
+    # only the bootstrap replan fits inside one interval
+    assert len(slow.replan_log) == 1
+    assert slow.replan_log[0].trigger == "bootstrap"
+
+
+# -- adaptive resample cadence -------------------------------------------------
+
+
+def _sampled(seed=0, **kw):
+    return _run_sched(
+        6, seed=seed, applies=2, congestion_mode="sampled",
+        model_bytes=6e5, **kw
+    )
+
+
+def test_resample_target_error_validated():
+    with pytest.raises(ValueError, match="needs resample_every"):
+        _sampled(resample_target_error=0.1)
+    with pytest.raises(ValueError, match="must be > 0"):
+        _sampled(resample_every=20.0, resample_target_error=0.0)
+
+
+def test_adaptive_cadence_tightens_and_bounds():
+    base = 200.0
+    s = _sampled(resample_every=base, resample_target_error=1e-12)
+    assert s.resample_log  # controller ran
+    everies = [e for (_, _, e, _) in s.resample_log]
+    # an unattainable target tightens the cadence, never past base/8
+    assert min(everies) < base and min(everies) >= base / 8.0
+    # constructor cadence untouched for the next run
+    assert s._resample_every0 == base
+
+
+def test_adaptive_cadence_relaxes_and_bounds():
+    base = 20.0
+    s = _sampled(resample_every=base, resample_target_error=1e9)
+    assert s.resample_log
+    everies = [e for (_, _, e, _) in s.resample_log]
+    assert max(everies) > base and max(everies) <= 4.0 * base
+    # event-count variant obeys its own bounds
+    s2 = _sampled(resample_events=50, resample_target_error=1e9)
+    events = [ev for (_, _, _, ev) in s2.resample_log]
+    assert events and max(events) <= 200 and min(events) >= 6
+
+
+def test_adaptive_cadence_off_is_identity():
+    frozen = _sampled(resample_every=100.0)
+    again = _sampled(resample_every=100.0, resample_target_error=None)
+    assert _trace(frozen) == _trace(again)
+    assert frozen.resample_log == [] and again.resample_log == []
+    assert frozen.resample_every == 100.0  # never mutated when off
+
+
+def test_adaptive_cadence_resets_between_runs():
+    s = _sampled(resample_every=200.0, resample_target_error=1e-12)
+    drifted = s.resample_every
+    assert drifted < 200.0
+    s.run(1, max_events=2_000_000)  # re-run: cadence restored from ctor
+    assert s.resample_log[0][2] <= 200.0
+    assert s._resample_every0 == 200.0
+
+
+# -- selector -> planner feedback ---------------------------------------------
+
+
+def _miss(sel, ai, w, cycle_ms, defer_ms=None):
+    if defer_ms is not None:
+        sel.on_defer(ai, w, 0.0, defer_ms)
+    sel.on_commit(ai, w, 0.0, cycle_ms)
+
+
+def test_transport_deferred_worker_replaced_not_blocklisted():
+    calls = []
+    sel = UtilitySelector(deadline_ms=100.0, blocklist_after=2, seed=0)
+    sel.placement_hook = lambda ai, w, kind, mag: calls.append((ai, w, kind))
+    # defer EMA dominates the cycle: transport-attributed
+    for _ in range(2):
+        _miss(sel, 0, 7, cycle_ms=400.0, defer_ms=900.0)
+    st = sel._s(0, 7)
+    assert calls and calls[-1] == (0, 7, "transport")
+    assert st.block_offers == 0 and st.misses == 0  # re-placed, not parked
+    assert sel.replaced_total == 1
+    # compute-slow worker (no defers): still blocklisted, planner told
+    for _ in range(2):
+        _miss(sel, 0, 9, cycle_ms=400.0)
+    st9 = sel._s(0, 9)
+    assert st9.block_offers > 0
+    assert calls[-1] == (0, 9, "deadline")
+
+
+def test_selector_legacy_policy_unchanged_without_hook():
+    mk = lambda: UtilitySelector(deadline_ms=100.0, blocklist_after=2, seed=0)
+    with_none, reference = mk(), mk()
+    for sel in (with_none, reference):
+        for _ in range(2):
+            _miss(sel, 0, 7, cycle_ms=400.0, defer_ms=900.0)
+    st = with_none._s(0, 7)
+    assert st.block_offers == reference._s(0, 7).block_offers > 0
+    assert with_none.replaced_total == 0
+
+
+def test_selector_feedback_wired_end_to_end():
+    """A placed run with a UtilitySelector wires the hook automatically
+    and stays deterministic."""
+    mk = lambda: UtilitySelector(deadline_ms=120.0, seed=0)
+    a = _run_sched(6, placement=PlacementEngine(), selector=mk(), applies=2)
+    b = _run_sched(6, placement=PlacementEngine(), selector=mk(), applies=2)
+    assert _trace(a) == _trace(b)
+    assert a.selector.placement_hook is not None
+
+
+# -- engine unit behavior ------------------------------------------------------
+
+
+def test_plan_tree_respects_caps_and_blocked():
+    f, tree, rng = _build_forest(n=400, seed=11, subs=80)
+    rows = np.arange(tree._n) % 16
+    cap = np.full(16, 40.0)
+    occ = np.zeros(16)
+    occ[rows[tree._slot[next(iter(tree.members))]]] = 50.0  # one hot uplink
+    eng = PlacementEngine(max_moves=3, cooldown_ms=0.0)
+    moves = eng.plan_tree(
+        tree, rows=rows, cap=cap, occ=occ, base_ms=5.0,
+        down_mbit=1.6, up_mbit=2.4, blocked=frozenset(tree.members),
+    )
+    # every member blocked as a target: moves may still pick relays,
+    # but movers/targets never include blocked nodes as new parents
+    assert all(m.new_parent not in tree.members for m in moves)
+    assert len(moves) <= 3
+    for m in moves:
+        assert isinstance(m, Move) and m.node != tree.root
+
+
+def test_plan_tree_cooldown_suppresses_thrash():
+    f, tree, rng = _build_forest(n=400, seed=13, subs=60)
+    rows = np.arange(tree._n) % 8
+    cap = np.full(8, 30.0)
+    occ = rng.uniform(0.0, 8.0, size=8)
+    eng = PlacementEngine(max_moves=4, cooldown_ms=1000.0)
+    kw = dict(rows=rows, cap=cap, occ=occ, base_ms=5.0,
+              down_mbit=1.6, up_mbit=2.4)
+    first = eng.plan_tree(tree, now_ms=0.0, **kw)
+    if not first:
+        pytest.skip("no profitable moves on this fixture")
+    again = eng.plan_tree(tree, now_ms=10.0, **kw)
+    moved = {m.node for m in first}
+    assert all(m.node not in moved for m in again)  # cooled down
+    later = eng.plan_tree(tree, now_ms=5000.0, **kw)
+    assert isinstance(later, list)  # cooldown expired: planning resumes
