@@ -1,25 +1,33 @@
-"""Compressed transport: qsgd-int8 commits vs full-f32 on a tight uplink.
+"""Compressed transport: qsgd commits + delta-qsgd broadcasts on a tight wire.
 
-Drives ``bench_fairness.compression_compare`` — M apps with near-zero
-compute and a 2 MB model, so the commit uplink dominates each cycle.
-Per-app ``CompressionPolicy(kind="qsgd-int8")`` shrinks every commit
-flow to ~0.26x (int8 lattice + per-256-chunk f32 scales) and the
-scheduler prices exactly those bytes through the fair-share fluid model,
-so the saving must show up as simulated wall-clock.
+Two axes, both driven from ``bench_fairness`` on the same commit-bound
+fixture (M apps, near-zero compute, 2 MB model):
 
-Gates (``bench_fairness.gate_compression``):
+**Uplink** (``compression_compare``): per-app
+``CompressionPolicy(kind="qsgd-int8")`` shrinks every commit flow to
+~0.26x (int8 lattice + per-256-chunk f32 scales) and the scheduler
+prices exactly those bytes through the fair-share fluid model, so the
+saving must show up as simulated wall-clock.
 
-- the mean simulated time-to-target-loss clearly improves under
-  compression (< 0.95x), with a > 25% per-app starvation guard (the
-  crossing time is quantized by apply events, so single-apply shifts
-  are tolerated);
-- the mean final loss drifts <= 1e-2 from the uncompressed run
-  (stochastic int8 rounding is statistically free at levels=127);
-- total uplink bytes shrink below 0.3x.
+**Downlink** (``downlink_compare``): with the uplink compressed, the
+full-f32 broadcast leg is ~80% of the remaining wire.  Adding
+``downlink="delta-qsgd"`` broadcasts 3-bit packed version deltas
+against the master's reference reconstruction; workers within
+``chain_cap`` versions download only their gap's cached deltas, and
+rejoiners fall back to the full f32 state.
 
-``python -m benchmarks.bench_compression --smoke`` runs M=16 and writes
-``BENCH_compression.json`` (a CI artifact); the full run adds M=64.
-Everything is seeded and deterministic.
+Gates (``bench_fairness.gate_compression`` / ``gate_downlink``):
+
+- uplink: mean time-to-target-loss < 0.95x, loss gap <= 1e-2, uplink
+  bytes < 0.3x, > 25% per-app starvation guard;
+- downlink (vs the uplink-only baseline): TOTAL wire bytes (up + down)
+  < 0.35x, mean time-to-target <= 0.90x, Jain over per-app progress no
+  worse, same starvation guard.
+
+``python -m benchmarks.bench_compression --smoke`` runs M=16 on both
+axes and writes ``BENCH_compression.json`` (a CI artifact); the full
+run adds M=64 on the uplink axis.  Everything is seeded and
+deterministic.
 """
 from __future__ import annotations
 
@@ -31,11 +39,17 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.bench_fairness import compression_compare, gate_compression
+from benchmarks.bench_fairness import (
+    compression_compare,
+    downlink_compare,
+    gate_compression,
+    gate_downlink,
+)
 from benchmarks.common import row
 
 SMOKE_MS = (16,)   # --smoke stays bounded at M <= 16
 FULL_MS = (16, 64)
+DOWNLINK_MS = (16,)  # the downlink gate is specified at M=16
 
 
 def run() -> list[str]:
@@ -50,6 +64,17 @@ def run() -> list[str]:
                 f"loss_gap={r['loss_gap']:.4f};bytes_ratio={r['bytes_ratio']:.3f}",
             )
         )
+    for m in DOWNLINK_MS:
+        r = downlink_compare(m)
+        out.append(
+            row(
+                f"downlink_m{m}",
+                0.0,
+                f"mean_tt_ratio={r['mean_tt_ratio']:.2f};"
+                f"total_bytes_ratio={r['bytes_total_ratio']:.3f};"
+                f"jain={r['jain_up_only']:.3f}->{r['jain_up_down']:.3f}",
+            )
+        )
     return out
 
 
@@ -58,7 +83,7 @@ def main(argv=None) -> None:
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
     )
     ap.add_argument("--smoke", action="store_true",
-                    help="M=16 only; write BENCH_compression.json")
+                    help="M=16 on both axes; write BENCH_compression.json")
     ap.add_argument("--out", default="BENCH_compression.json")
     args = ap.parse_args(argv)
 
@@ -70,25 +95,38 @@ def main(argv=None) -> None:
             f"uplink bytes {r['bytes_ratio']:.3f}x"
         )
 
+    down_results = [downlink_compare(m) for m in DOWNLINK_MS]
+    for r in down_results:
+        print(
+            f"M={r['m']} downlink: time-to-loss up+down/up-only mean "
+            f"{r['mean_tt_ratio']:.2f}x (worst {r['max_tt_ratio']:.2f}x)  "
+            f"total bytes {r['bytes_total_ratio']:.3f}x  "
+            f"broadcast bytes {r['downlink_bytes_ratio']:.3f}x  "
+            f"jain {r['jain_up_only']:.3f} -> {r['jain_up_down']:.3f}"
+        )
+
     from benchmarks.bench_async import _json_safe
 
     payload = _json_safe({
         "bench": "compressed_transport",
         "smoke": bool(args.smoke),
         "results": results,
+        "downlink_results": down_results,
     })
     out_path = os.path.abspath(args.out)
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, allow_nan=False)
     print(f"wrote {out_path}")
 
-    fails = gate_compression(results)
+    fails = gate_compression(results) + gate_downlink(down_results)
     for msg in fails:
         print(f"GATE FAIL: {msg}")
     if fails:
         raise SystemExit(1)
-    print("compression gates passed: mean time-to-target clearly improves "
-          "(no app starved), loss gap <= 1e-2, uplink bytes < 0.3x")
+    print("compression gates passed: uplink (mean time-to-target improves, "
+          "no app starved, loss gap <= 1e-2, uplink bytes < 0.3x) and "
+          "downlink (total bytes < 0.35x, mean time-to-target <= 0.90x, "
+          "jain no worse)")
 
 
 if __name__ == "__main__":

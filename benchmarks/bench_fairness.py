@@ -275,6 +275,133 @@ def compression_compare(
     }
 
 
+def downlink_compare(
+    m: int = 16, *, seed: int = 0, target: float = 0.35
+) -> dict:
+    """The tight-downlink axis (docs/performance.md "compressed
+    downlink"): the same commit-bound fixture as ``compression_compare``
+    — near-zero compute, 2 MB model, K = W so workers re-download every
+    version — where the full-f32 broadcast leg is ~80% of the wire.
+    Three runs on the identical topology/schedule: uncompressed,
+    uplink-only qsgd-int8 (the PR-8 baseline), and uplink qsgd +
+    delta-qsgd downlink (3-bit packed version deltas, ``chain_cap=3``).
+    Gated (``gate_downlink``) against the uplink-only baseline: total
+    wire bytes (up + down) < 0.35x, mean time-to-target <= 0.90x, Jain
+    over per-app progress no worse, and a 25% per-app starvation
+    guard."""
+    from repro import data as data_mod
+    from repro.fl import async_engine, rounds
+    from repro.fl.compression import CompressionPolicy
+    from repro.kernels.ops import jain_fairness
+
+    workers, applies, model_bytes = 4, 12, 2e6
+    n_nodes = max(80, 5 * m)
+
+    def make_apps(sys_, nodes, rng):
+        apps = []
+        for a in range(m):
+            x, y = data_mod.synthetic_classification(workers * 24, 16, 4, seed=100 + a)
+            parts = data_mod.dirichlet_partition(y, workers, alpha=1.0, seed=200 + a)
+            ws = [int(n) for n in rng.choice(nodes, size=workers, replace=False)]
+            apps.append(
+                rounds.make_app(
+                    sys_, f"down-{m}-{a}", workers=ws,
+                    data_by_worker={n: (x[parts[i]], y[parts[i]]) for i, n in enumerate(ws)},
+                    dim=16, num_classes=4, local_steps=3, lr=0.2, seed=a,
+                )
+            )
+        return apps
+
+    def tt(history, app_id):
+        for r in history:
+            if r["app_id"] == app_id and r["loss"] <= target:
+                return r["t_ms"]
+        return float("inf")
+
+    def run(compression):
+        sys_, nodes, rng = build_system(n_nodes=n_nodes, zones=4, seed=seed)
+        apps = make_apps(sys_, nodes, rng)
+        res = async_engine.run_async(
+            sys_, apps, applies=applies, buffer_k=4, staleness_alpha=0.5,
+            model_bytes=model_bytes, compute_ms=5.0, fair=True,
+            compression=compression, max_events=8_000_000,
+        )
+        ids = [a.handle.app_id for a in apps]
+        st = res["scheduler"].transport_stats()
+        return {
+            "tt": [tt(res["history"], i) for i in ids],
+            "up": sum(st["uplink_bytes"]),
+            "down": sum(st["downlink_bytes"]),
+        }
+
+    up_only = run(CompressionPolicy(kind="qsgd-int8"))
+    up_down = run(CompressionPolicy(
+        kind="qsgd-int8", downlink="delta-qsgd", downlink_levels=3, chain_cap=3
+    ))
+    none = run(None)
+
+    def jain_progress(r):
+        return jain_fairness([1.0 / max(t, 1e-9) for t in r["tt"]])
+
+    ratio = [d / max(u, 1e-9) for d, u in zip(up_down["tt"], up_only["tt"])]
+    total_up_only = up_only["up"] + up_only["down"]
+    total_up_down = up_down["up"] + up_down["down"]
+    return {
+        "m": m,
+        "target_loss": target,
+        "model_bytes": model_bytes,
+        "tt_none_ms": none["tt"],
+        "tt_up_only_ms": up_only["tt"],
+        "tt_up_down_ms": up_down["tt"],
+        "tt_ratio": ratio,
+        "mean_tt_ratio": float(np.mean(ratio)),
+        "max_tt_ratio": max(ratio),
+        "bytes_up_only": total_up_only,
+        "bytes_up_down": total_up_down,
+        "bytes_none": none["up"] + none["down"],
+        "bytes_total_ratio": float(total_up_down / max(total_up_only, 1e-9)),
+        "downlink_bytes_ratio": float(up_down["down"] / max(up_only["down"], 1e-9)),
+        "jain_up_only": jain_progress(up_only),
+        "jain_up_down": jain_progress(up_down),
+        "all_finite": bool(
+            all(np.isfinite(t) for t in up_only["tt"] + up_down["tt"])
+        ),
+    }
+
+
+def gate_downlink(rows: list[dict]) -> list[str]:
+    """Compressed-downlink acceptance gates; human-readable failures."""
+    fails = []
+    for r in rows:
+        if not r["all_finite"]:
+            fails.append(f"downlink M={r['m']}: an app never hit the target loss")
+        if r["bytes_total_ratio"] >= 0.35:
+            fails.append(
+                f"downlink M={r['m']}: total wire bytes "
+                f"{r['bytes_total_ratio']:.3f}x >= 0.35x uplink-only baseline"
+            )
+        if r["mean_tt_ratio"] > 0.90:
+            fails.append(
+                f"downlink M={r['m']}: mean time-to-target "
+                f"{r['mean_tt_ratio']:.2f} > 0.90x (compressed broadcasts "
+                f"must buy wall-clock)"
+            )
+        # starvation guard (same rationale as gate_compression: the apply
+        # quantization of time-to-target tolerates one-apply shifts)
+        if r["max_tt_ratio"] > 1.25:
+            fails.append(
+                f"downlink M={r['m']}: an app regressed "
+                f"{(r['max_tt_ratio'] - 1) * 100:.1f}% (> 25%)"
+            )
+        # fp slack only — the downlink must not redistribute progress
+        if r["jain_up_down"] < r["jain_up_only"] - 0.02:
+            fails.append(
+                f"downlink M={r['m']}: jain worsened "
+                f"({r['jain_up_only']:.3f} -> {r['jain_up_down']:.3f})"
+            )
+    return fails
+
+
 def gate_compression(rows: list[dict]) -> list[str]:
     """Compressed-transport acceptance gates; human-readable failures."""
     fails = []

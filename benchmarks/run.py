@@ -27,7 +27,7 @@ REGISTRY: list[tuple[str, str, str]] = [
     ("fairness(TabIII)", "benchmarks.bench_fairness",
      "multi-app uplink fairness: weighted-fair re-pricing vs legacy start-time pricing, Jain's index at M in {4,16,64}"),
     ("compression", "benchmarks.bench_compression",
-     "compressed transport: qsgd-int8 commits through the fair-share fluid model vs full f32 — time-to-target-loss and <=1e-2 loss-gap gates on a tight uplink"),
+     "compressed wire, both directions: qsgd-int8 commits (time-to-target + <=1e-2 loss-gap gates on a tight uplink) and delta-qsgd downlink broadcasts (total bytes < 0.35x, time-to-target <= 0.90x vs uplink-only)"),
     ("hotpath(perf)", "benchmarks.bench_hotpath",
      "simulator hot paths: megabatched dispatch + compiled kernel fallback + incremental repricing vs the pre-optimization engine (>=3x gate, byte-identical traces)"),
     ("scale(perf)", "benchmarks.bench_scale",

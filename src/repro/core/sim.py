@@ -1111,14 +1111,18 @@ class AsyncBufferScheduler(EventCore):
                 "share would price the app's transfers at rate 0 and its "
                 "cycles would never complete"
             )
-        # commit-direction compression (docs/performance.md "compressed
-        # transport"): a per-app CompressionPolicy shrinks the COMMIT
-        # payload, and the compressed byte count is what every pricing
-        # path sees — fair-share flows (open_flow mbit), the legacy
-        # start-time pricing, and sampled cold-cycle legs.  Downloads
-        # stay full-model-sized (the master broadcasts f32 params).
-        # policy None / kind="none" reproduces model_bytes through the
-        # same float expressions, so disabled traces are byte-identical.
+        # compression (docs/performance.md "compressed transport" /
+        # "compressed downlink"): a per-app CompressionPolicy shrinks the
+        # COMMIT payload, and — when its downlink axis is on — the
+        # BROADCAST payload too; the compressed byte counts are what
+        # every pricing path sees: fair-share flows (open_flow mbit),
+        # the legacy start-time pricing, and sampled cold-cycle legs.
+        # Download legs are priced per worker (_download_mbit): a
+        # delta-qsgd worker pays its version-gap chain, a rejoiner or
+        # over-cap straggler the full f32 fallback.  policy None /
+        # kind="none" / downlink="none" reproduces model_bytes through
+        # the same float expressions, so disabled traces stay
+        # byte-identical.
         from repro.fl.compression import CompressionPolicy, as_policy
 
         if isinstance(app_compression, (str, CompressionPolicy)):
@@ -1131,6 +1135,16 @@ class AsyncBufferScheduler(EventCore):
             for p in self._compression
         ]
         self._commit_mbit = [b * 8e-6 for b in self._commit_bytes]
+        # steady-state broadcast size for the placement planner: one
+        # version delta for delta-qsgd, the quantized model for
+        # downlink qsgd-int8, env.packet_mbit (the same float object)
+        # when the downlink is uncompressed
+        self._downlink_mbit_plan = [
+            self.env.packet_mbit
+            if (p is None or not p.downlink_enabled)
+            else p.downlink_wire_bytes(model_bytes, chain=1) * 8e-6
+            for p in self._compression
+        ]
         self.controllers: list[AdaptiveKController | None] = []
         self.history: list[ApplyEvent] = []
         self.churn_log: list[ChurnRecord] = []
@@ -1152,6 +1166,13 @@ class AsyncBufferScheduler(EventCore):
         self._applies_target = 1
         # weighted-fair transport state
         self._uplink_bytes: list[float] = []
+        # downlink ledger + per-worker delta-chain state (compressed
+        # downlink): which version each worker last downloaded, and the
+        # byte credit stashed at cycle start until the cycle completes
+        self._downlink_bytes: list[float] = []
+        self._worker_base: dict[tuple[int, int], int] = {}
+        self._pending_down_bytes: dict[tuple[int, int], float] = {}
+        self.downlink_log: list[tuple] = []  # (t, ai, w, chain|None, bytes)
         self._done_ms: list[float] = []
         self._defer_count: list[int] = []
         self._deferred: dict[int, list[dict]] = {}  # relay -> FIFO of records
@@ -1301,9 +1322,13 @@ class AsyncBufferScheduler(EventCore):
         ) / np.maximum(rate, np.float32(1e-6))
         return float(lat.sum())
 
-    def _start_cycle_cold(self, ai: int, w: int, delay: float) -> None:
+    def _start_cycle_cold(
+        self, ai: int, w: int, delay: float, down_mbit: float | None = None
+    ) -> None:
         """Sampled-mode cold path: price the whole cycle now, occupy its
-        uplinks statistically, and complete in ONE cohort event."""
+        uplinks statistically, and complete in ONE cohort event.
+        ``down_mbit`` carries the compressed broadcast size (None keeps
+        the legacy full-model price, bit for bit)."""
         key = (ai, w)
         down = self._path_senders(ai, w, up=False)
         up = self._path_senders(ai, w, up=True)
@@ -1313,14 +1338,16 @@ class AsyncBufferScheduler(EventCore):
         else:
             comp = float(self.compute_ms)
         dur = (
-            delay + self._sampled_leg_ms(down) + comp
+            delay + self._sampled_leg_ms(down, down_mbit) + comp
             + self._sampled_leg_ms(up, self._commit_mbit[ai])
         )
         hops = np.concatenate([down, up]).astype(np.int64)
         if len(hops):
             np.add.at(self._cold_load, hops, 1)
             self._cold_hops[key] = hops
-            self._cold_span[key] = (self.now, self.now + dur, down, up, comp + delay, dur)
+            self._cold_span[key] = (
+                self.now, self.now + dur, down, up, comp + delay, dur, down_mbit
+            )
         self._pending_ev[key] = self._sched_worker(
             ai, dur, lambda t, ai=ai, w=w: self._finish_cold_cycle(ai, w, t)
         )
@@ -1359,12 +1386,12 @@ class AsyncBufferScheduler(EventCore):
             hops = self._cold_hops.get(key)
             if span is None or hops is None:
                 continue
-            t0, t1, down, up, fixed, total = span
+            t0, t1, down, up, fixed, total, down_mbit = span
             if t1 <= t or t1 <= t0:
                 continue  # completing at this very instant
             np.subtract.at(self._cold_load, hops, 1)
             new_total = (
-                self._sampled_leg_ms(down) + fixed
+                self._sampled_leg_ms(down, down_mbit) + fixed
                 + self._sampled_leg_ms(up, self._commit_mbit[key[0]])
             )
             np.add.at(self._cold_load, hops, 1)
@@ -1380,7 +1407,7 @@ class AsyncBufferScheduler(EventCore):
             self._pending_ev[key] = self._sched_worker(
                 ai, new_end - t, lambda tt, ai=ai, w=w: self._finish_cold_cycle(ai, w, tt)
             )
-            self._cold_span[key] = (t, new_end, down, up, fixed, new_total)
+            self._cold_span[key] = (t, new_end, down, up, fixed, new_total, down_mbit)
         if self.resample_target_error is not None and drift_n:
             self._adapt_resample_cadence(t, drift_sum / drift_n)
 
@@ -1447,6 +1474,37 @@ class AsyncBufferScheduler(EventCore):
         else:
             self._parked[ai].add(w)
 
+    def _download_mbit(self, ai: int, w: int, senders) -> float | None:
+        """Price one broadcast (download) leg for this worker's cycle.
+
+        ``None`` means the downlink is uncompressed — callers fall
+        through to the exact legacy expressions (``env.packet_mbit``),
+        keeping disabled traces byte-identical.  Otherwise the size is
+        ``downlink_wire_bytes``: for delta-qsgd, the worker's version
+        gap as a delta chain when its cached base is within
+        ``chain_cap`` (a gap of 0 is a free version check), the full
+        f32 state when it has no base (first download, churn rejoin —
+        ``_worker_base`` is dropped on fail) or the gap exceeds the
+        cap.  The byte credit (size x path legs) is stashed and lands
+        on the per-app downlink ledger when the cycle commits — the
+        same cycle-completion granularity the uplink ledger uses in
+        every pricing mode."""
+        p = self._compression[ai]
+        if p is None or not p.downlink_enabled:
+            return None
+        key = (ai, w)
+        cur = self._version[ai]
+        chain = None
+        if p.downlink == "delta-qsgd":
+            base = self._worker_base.get(key)
+            if base is not None and 0 <= cur - base <= p.chain_cap:
+                chain = cur - base
+        self._worker_base[key] = cur
+        down_bytes = p.downlink_wire_bytes(self.model_bytes, chain=chain)
+        self._pending_down_bytes[key] = down_bytes * len(senders)
+        self.downlink_log.append((self.now, ai, w, chain, down_bytes))
+        return down_bytes * 8e-6
+
     def _start_cycle(self, ai: int, w: int) -> None:
         if self._done[ai] or w in self._failed:
             return
@@ -1457,18 +1515,19 @@ class AsyncBufferScheduler(EventCore):
         if self.trainer is not None:
             self.trainer.begin_download(ai, w)
         senders = self._path_senders(ai, w, up=False)
+        down_mbit = self._download_mbit(ai, w, senders)
         if self.congestion_mode == "sampled" and not (
             self._is_hot(senders) or self._is_hot(self._path_senders(ai, w, up=True))
         ):
-            self._start_cycle_cold(ai, w, delay)
+            self._start_cycle_cold(ai, w, delay, down_mbit)
             return
         if self.fair:
             self._begin_leg(
-                ai, w, senders, delay, commit=False,
+                ai, w, senders, delay, commit=False, mbit=down_mbit,
                 done=lambda t, ai=ai, w=w: self._on_downloaded(ai, w, t),
             )
             return
-        dur = delay + self.transfer_ms(senders, reduce="sum")
+        dur = delay + self.transfer_ms(senders, reduce="sum", mbit=down_mbit)
         self._pending_ev[key] = self._sched_worker(
             ai, dur, lambda t, ai=ai, w=w: self._on_downloaded(ai, w, t), senders
         )
@@ -1502,7 +1561,10 @@ class AsyncBufferScheduler(EventCore):
 
     # -- fair-share leg execution (hop-by-hop fluid flows) ---------------------
 
-    def _begin_leg(self, ai: int, w: int, senders, delay: float, *, commit: bool, done) -> None:
+    def _begin_leg(
+        self, ai: int, w: int, senders, delay: float, *, commit: bool, done,
+        mbit: float | None = None,
+    ) -> None:
         """Run one transfer leg (download or upload) as sequential per-hop
         flows on the fair-share engine.  The leg's store-and-forward total
         for an uncontended path equals the legacy ``reduce="sum"`` price
@@ -1537,7 +1599,10 @@ class AsyncBufferScheduler(EventCore):
                 lambda t, j=j, relay=hops[j]: open_hop(j, relay),
             )
 
-        leg_mbit = self._commit_mbit[ai] if commit else self.env.packet_mbit
+        if mbit is not None:
+            leg_mbit = mbit  # compressed broadcast size from _download_mbit
+        else:
+            leg_mbit = self._commit_mbit[ai] if commit else self.env.packet_mbit
 
         def open_hop(j: int, relay: int) -> None:
             if self._done[ai] or w in self._failed:
@@ -1640,6 +1705,14 @@ class AsyncBufferScheduler(EventCore):
         # (tests/test_fairness.py on _Flow.delivered_mbit)
         up_path = self._path_senders(ai, w, up=True)
         self._uplink_bytes[ai] += self._commit_bytes[ai] * len(up_path)
+        # the matching downlink credit: stashed by _download_mbit when a
+        # compression policy prices the broadcast, else the legacy
+        # full-model size over the download path — same cycle-commit
+        # granularity as the uplink ledger in every pricing mode
+        down_credit = self._pending_down_bytes.pop(key, None)
+        if down_credit is None:
+            down_credit = self.model_bytes * len(self._path_senders(ai, w, up=False))
+        self._downlink_bytes[ai] += down_credit
         if self.placement is not None and len(up_path):
             # per-uplink ledger for the placement engine's reward model
             np.add.at(self.uplink_bytes, up_path, self._commit_bytes[ai])
@@ -1722,6 +1795,7 @@ class AsyncBufferScheduler(EventCore):
             "t_ms": t,
             "app_id": self.handles[ai].tree.app_id,
             "uplink_bytes": self._uplink_bytes[ai],
+            "downlink_bytes": self._downlink_bytes[ai],
             "uplink_mbps": tp[ai],
             "jain_uplink": jain_fairness(tp),
             "deferred_commits": self._defer_count[ai],
@@ -1735,6 +1809,7 @@ class AsyncBufferScheduler(EventCore):
         tp = self._uplink_throughputs()
         return {
             "uplink_bytes": list(self._uplink_bytes),
+            "downlink_bytes": list(self._downlink_bytes),
             "uplink_mbps": tp,
             "done_ms": [
                 self._done_ms[ai] if self._done[ai] else self.now
@@ -1812,7 +1887,7 @@ class AsyncBufferScheduler(EventCore):
                 cap=self._cap_mbps,
                 occ=occ,
                 base_ms=self.base_ms,
-                down_mbit=self.env.packet_mbit,
+                down_mbit=self._downlink_mbit_plan[ai],
                 up_mbit=self._commit_mbit[ai],
                 flagged=eng.consume_flags(ai),
                 blocked=self._failed,
@@ -1909,6 +1984,10 @@ class AsyncBufferScheduler(EventCore):
                     self._drop_deferred(key)
                     self._version_at_start.pop(key, None)
                     self._cycle_start.pop(key, None)
+                    # a failed worker loses its cached broadcast base:
+                    # on rejoin its first download is priced full-state
+                    self._worker_base.pop(key, None)
+                    self._pending_down_bytes.pop(key, None)
                     self._parked[ai].discard(n)
                     if self.trainer is not None:
                         self.trainer.drop(ai, n)
@@ -2035,6 +2114,10 @@ class AsyncBufferScheduler(EventCore):
         self._parked = [set() for _ in range(n)]
         self._failed.clear()
         self._uplink_bytes = [0.0] * n
+        self._downlink_bytes = [0.0] * n
+        self._worker_base = {}
+        self._pending_down_bytes = {}
+        self.downlink_log = []
         self._done_ms = [0.0] * n
         self._defer_count = [0] * n
         self._deferred = {}

@@ -38,9 +38,18 @@ from __future__ import annotations
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.fl import engine
-from repro.fl.compression import CompressionPolicy, as_policy, commit_key, quantize_delta
+from repro.fl.compression import (
+    CompressionPolicy,
+    apply_delta_chain,
+    as_policy,
+    broadcast_key,
+    commit_key,
+    quantize_broadcast_delta,
+    quantize_delta,
+)
 
 
 class AsyncTrainer:
@@ -55,7 +64,22 @@ class AsyncTrainer:
     enabled policy quantizes every commit delta (``quantize_delta``)
     under a per-commit rounding key before it enters ``CommitDelta`` —
     the buffered entries then carry ``QuantizedDelta`` wire payloads and
-    ``ApplyBuffered`` dequantizes inside the aggregation kernel.
+    ``ApplyBuffered`` dequantizes inside the aggregation kernel.  With
+    ``error_feedback`` set, each worker's quantization residual
+    ``x - deq(q(x))`` is carried into its next commit (EF-SGD), so
+    coarse ``levels`` settings stay unbiased over rounds; a failed
+    worker loses its residual with the rest of its local state.
+
+    A policy with ``downlink != "none"`` also compresses the broadcast
+    direction: the per-version snapshot the workers train from becomes
+    the *broadcast state* — ``deq(quantize(params_v))`` for
+    ``downlink="qsgd-int8"``, or for ``"delta-qsgd"`` the reference
+    reconstruction updated by one fused ``apply_delta_chain`` step per
+    apply, with the quantized version delta cached (bounded to
+    ``chain_cap`` entries) so stale workers can chain their gap.  Every
+    worker at version v holds the same canonical state, so version-group
+    megabatching is untouched; the master always aggregates into the
+    exact f32 params.
     """
 
     def __init__(
@@ -83,6 +107,13 @@ class AsyncTrainer:
         self._refs = [{0: 0} for _ in range(n)]  # version -> in-flight users
         self._worker_version = [dict() for _ in range(n)]  # worker -> version
         self._pending = [[] for _ in range(n)]  # committed (worker, version, seq)
+        # EF-SGD residual store: worker -> residual pytree (error_feedback)
+        self._ef = [dict() for _ in range(n)]
+        # downlink delta-qsgd state: the reference reconstruction the
+        # workers hold (== _snapshots[ai][version]) and the bounded
+        # version-delta cache, keyed by the version each delta produces
+        self._recon = [a.params for a in self.apps]
+        self._delta_cache = [dict() for _ in range(n)]  # version -> QuantizedDelta
         self.history: list[dict] = []
 
     # -- scheduler hooks -------------------------------------------------------
@@ -109,10 +140,48 @@ class AsyncTrainer:
 
     def drop(self, ai: int, w: int) -> None:
         """``w`` failed mid-cycle: release its version pin.  Commits it
-        already delivered stay buffered — the master has them."""
+        already delivered stay buffered — the master has them.  Its
+        EF-SGD residual is local state and dies with it."""
         v = self._worker_version[ai].pop(w, None)
         if v is not None:
             self._refs[ai][v] -= 1
+        self._ef[ai].pop(w, None)
+
+    def delta_chain(self, ai: int, base: int, target: int) -> list:
+        """The cached broadcast deltas reconstructing ``base -> target``
+        (one per version step).  Raises ``KeyError`` past the cache
+        window — exactly the gap the scheduler prices as a full f32
+        fallback download."""
+        return [self._delta_cache[ai][v] for v in range(base + 1, target + 1)]
+
+    def _broadcast_state(self, ai: int, params, version: int, policy) -> object:
+        """What a worker downloading ``version`` actually receives.
+
+        ``downlink="qsgd-int8"``: the dequantized full-model broadcast.
+        ``"delta-qsgd"``: the reference reconstruction — the previous
+        reference plus this version's quantized delta, folded in by one
+        fused ``apply_delta_chain`` step.  Quantizing against the
+        *reference* (not the previous exact params) is error feedback on
+        the downlink: the reference stays within one quantizer bound of
+        the true params at every version, and a worker chaining cached
+        deltas from any base lands bit-for-bit on this state."""
+        if policy.downlink == "qsgd-int8":
+            qd = quantize_broadcast_delta(params, policy, broadcast_key(policy, ai, version))
+            deq = qd.dequantize()
+            return jax.tree.map(
+                lambda p, v: np.asarray(v, dtype=np.asarray(p).dtype), params, deq
+            )
+        delta = jax.tree.map(
+            lambda p, r: np.asarray(p, np.float32) - np.asarray(r, np.float32),
+            params, self._recon[ai],
+        )
+        qd = quantize_broadcast_delta(delta, policy, broadcast_key(policy, ai, version))
+        cache = self._delta_cache[ai]
+        cache[version] = qd
+        for v in [v for v in cache if v <= version - int(policy.chain_cap)]:
+            del cache[v]
+        self._recon[ai] = apply_delta_chain(self._recon[ai], [qd])
+        return self._recon[ai]
 
     def apply(
         self, ai: int, t: float, *, k: int | None = None, selector_scores=None,
@@ -160,7 +229,24 @@ class AsyncTrainer:
             for (w, seq), d, wt, l in zip(ws, deltas, weights, group_losses):
                 payload = d
                 if policy is not None and policy.enabled:
-                    payload = quantize_delta(d, policy, commit_key(policy, ai, seq))
+                    target = d
+                    if policy.error_feedback:
+                        # EF-SGD: fold the worker's carried residual into
+                        # this commit before quantizing, then carry the
+                        # fresh quantization error forward
+                        r = self._ef[ai].get(w)
+                        if r is not None:
+                            target = jax.tree.map(
+                                lambda a, b: jnp.asarray(a, jnp.float32) + b, d, r
+                            )
+                    payload = quantize_delta(target, policy, commit_key(policy, ai, seq))
+                    if policy.error_feedback:
+                        deq = payload.dequantize()
+                        self._ef[ai][w] = jax.tree.map(
+                            lambda a, b: jnp.asarray(a, jnp.float32)
+                            - jnp.asarray(np.asarray(b), jnp.float32),
+                            target, deq,
+                        )
                 self.system.CommitDelta(
                     app.handle.app_id, w, payload, weight=wt, staleness=cur - v
                 )
@@ -189,7 +275,14 @@ class AsyncTrainer:
         app.params = jax.tree.map(lambda p, d: (p + d).astype(p.dtype), app.params, agg)
         app.round_num += 1
         self.version[ai] = cur + 1
-        self._snapshots[ai][cur + 1] = app.params
+        # the snapshot is what workers RECEIVE for this version: the
+        # exact params, or the compressed broadcast state when the
+        # downlink axis is on (every worker at a version holds the same
+        # canonical state, so version-group training is unchanged)
+        held = app.params
+        if policy is not None and policy.downlink_enabled:
+            held = self._broadcast_state(ai, app.params, cur + 1, policy)
+        self._snapshots[ai][cur + 1] = held
         self._refs[ai][cur + 1] = self._refs[ai].get(cur + 1, 0)
         self._gc_snapshots(ai)
         if self.replicate:
@@ -272,7 +365,12 @@ def run_async(
     turns on commit-direction quantization: the trainer serializes each
     delta to a ``QuantizedDelta`` and the scheduler prices commit legs
     at the compressed wire size (docs/performance.md "compressed
-    transport").
+    transport").  A policy's ``downlink`` axis additionally compresses
+    broadcasts — the scheduler prices each download at the worker's
+    delta-chain (or fallback) size and the trainer serves the matching
+    broadcast state (docs/performance.md "compressed downlink");
+    ``error_feedback`` carries per-worker EF-SGD residuals across
+    commits.
 
     Scale knobs (docs/performance.md "scale layer"): ``cohort`` batches
     per-worker events into one heap entry per app (trace-identical,

@@ -25,6 +25,23 @@ Rounding bits: every commit draws its own PRNG key via ``commit_key``
 not share rounding bias — the old deterministic default (``rand=0.5``
 everywhere) rounded every commit half-down identically.  A fixed
 (policy, app, seq) triple reproduces the wire bytes exactly.
+
+Compressed downlink (docs/performance.md "compressed downlink"): the
+``downlink`` axis governs the *broadcast* direction — the master's
+model downloads.  ``"qsgd-int8"`` quantizes each new version before it
+ships; ``"delta-qsgd"`` broadcasts ``quantize(params_v+1 - ref_v)``
+against a bounded per-app version-delta cache, where ``ref_v`` is the
+reference reconstruction every delta-following worker holds (error
+feedback on the downlink: the reference absorbs each step's quantizer
+error, so drift from the true params stays one quantization bound, it
+never compounds).  A worker K versions behind downloads the chained
+deltas for its gap; past ``chain_cap`` (or with no cached base at all —
+first download, churn rejoin) it falls back to the full f32 state.
+Delta payloads pack the small ``downlink_levels`` lattice at
+``downlink_bits`` bits per element (``delta_wire_bytes``); the
+scheduler prices every broadcast leg at ``downlink_wire_bytes`` and the
+fused ``kernels.ops.apply_quantized_broadcast`` kernel folds a whole
+chain into the held params in one pass (``apply_delta_chain``).
 """
 from __future__ import annotations
 
@@ -96,24 +113,45 @@ def error_feedback_update(x: jax.Array, err: jax.Array, compress_fn):
 
 # -- per-app commit compression policy (bytes on the wire) ---------------------
 
-_KINDS = ("none", "qsgd-int8")
+_KINDS = ("none", "qsgd-int8", "signsgd", "topk")
+_DOWNLINK_KINDS = ("none", "qsgd-int8", "delta-qsgd")
 
 
 @dataclass(frozen=True)
 class CompressionPolicy:
-    """Per-app commit-direction compression (paper Table II's per-app
-    compression hooks, made first-class for the transport model).
+    """Per-app compression for both wire directions (paper Table II's
+    per-app compression hooks, made first-class for the transport model).
 
-    ``kind``: ``"none"`` (full f32 payloads, the byte-identical default)
-    or ``"qsgd-int8"`` (QSGD stochastic int8, one f32 max-abs scale per
-    ``chunk`` elements).  ``levels`` is the quantization grid per sign
-    (<= 127 so the lattice fits int8).  ``seed`` roots the per-commit
-    rounding-key chain (``commit_key``)."""
+    Commit (uplink) axis — ``kind``: ``"none"`` (full f32 payloads, the
+    byte-identical default), ``"qsgd-int8"`` (QSGD stochastic int8, one
+    f32 max-abs scale per ``chunk`` elements), ``"signsgd"`` (1-bit sign
+    + per-chunk mean-|x| scale, ref [38]), or ``"topk"`` (keep the
+    ``topk_frac`` fraction by |value|, QSGD-quantized; wire ships int8
+    value + i32 index per survivor).  ``levels`` is the quantization
+    grid per sign (<= 127 so the lattice fits int8).  ``seed`` roots the
+    per-commit rounding-key chain (``commit_key``).  ``error_feedback``
+    turns on EF-SGD: the trainer carries each worker's residual
+    ``x - deq(q(x))`` into its next commit, so aggressive ``levels``
+    settings stay unbiased over rounds.
+
+    Broadcast (downlink) axis — ``downlink``: ``"none"`` (full f32
+    broadcasts, byte-identical to the uncompressed path),
+    ``"qsgd-int8"`` (each new version ships quantized at ``levels``), or
+    ``"delta-qsgd"`` (version deltas quantized at ``downlink_levels``
+    and packed at ``downlink_bits`` bits/element; workers <= ``chain_cap``
+    versions behind download the chained deltas, everyone else the full
+    f32 state — see the module docstring for the reference-
+    reconstruction scheme)."""
 
     kind: str = "none"
     levels: int = 127
     chunk: int = 256
     seed: int = 0
+    topk_frac: float = 0.01
+    error_feedback: bool = False
+    downlink: str = "none"
+    downlink_levels: int = 7
+    chain_cap: int = 3
 
     def __post_init__(self):
         if self.kind not in _KINDS:
@@ -122,25 +160,87 @@ class CompressionPolicy:
             raise ValueError(f"levels must be in [1, 127] (int8 lattice), got {self.levels!r}")
         if int(self.chunk) < 1:
             raise ValueError(f"chunk must be >= 1, got {self.chunk!r}")
+        if not 0.0 < float(self.topk_frac) <= 1.0:
+            raise ValueError(f"topk_frac must be in (0, 1], got {self.topk_frac!r}")
+        if self.downlink not in _DOWNLINK_KINDS:
+            raise ValueError(
+                f"downlink kind must be one of {_DOWNLINK_KINDS}, got {self.downlink!r}"
+            )
+        if not 1 <= int(self.downlink_levels) <= 127:
+            raise ValueError(
+                f"downlink_levels must be in [1, 127] (int8 lattice), "
+                f"got {self.downlink_levels!r}"
+            )
+        if int(self.chain_cap) < 1:
+            raise ValueError(f"chain_cap must be >= 1, got {self.chain_cap!r}")
 
     @property
     def enabled(self) -> bool:
         return self.kind != "none"
 
+    @property
+    def downlink_enabled(self) -> bool:
+        return self.downlink != "none"
+
+    def _rows(self, payload_bytes: float) -> int:
+        return max(1, math.ceil(float(payload_bytes) / 4.0 / self.chunk))
+
     def wire_bytes(self, payload_bytes: float) -> float:
-        """Modeled bytes on the wire for a ``payload_bytes`` f32 payload.
+        """Modeled commit bytes on the wire for a ``payload_bytes`` f32
+        payload.
 
         qsgd-int8 serializes n = payload_bytes/4 elements as one int8
         each, padded to whole chunks, plus one f32 scale per chunk —
         exactly ``QuantizedDelta.nbytes`` for a real n-element delta
-        (tested).  ``kind="none"`` returns the input unchanged (same
-        float object arithmetic as the uncompressed path, so pricing is
-        bit-identical)."""
+        (tested).  signsgd bit-packs one sign per element (chunk/8 bytes
+        per row) plus the per-chunk f32 scale.  topk ships k = ceil(n *
+        topk_frac) survivors as int8 value + i32 index pairs plus the
+        per-chunk scales.  ``kind="none"`` returns the input unchanged
+        (same float object arithmetic as the uncompressed path, so
+        pricing is bit-identical)."""
         if not self.enabled:
             return float(payload_bytes)
         n = float(payload_bytes) / 4.0
-        rows = math.ceil(n / self.chunk)
+        rows = self._rows(payload_bytes)
+        if self.kind == "signsgd":
+            return float(rows * math.ceil(self.chunk / 8) + rows * 4)
+        if self.kind == "topk":
+            k = max(1, math.ceil(n * float(self.topk_frac)))
+            return float(5 * k + rows * 4)
         return float(rows * self.chunk + rows * 4)
+
+    @property
+    def downlink_bits(self) -> int:
+        """Bits per element of a packed broadcast delta: the minimal
+        fixed width for the 2*downlink_levels+1 lattice points."""
+        return max(1, math.ceil(math.log2(2 * int(self.downlink_levels) + 1)))
+
+    def delta_wire_bytes(self, payload_bytes: float) -> float:
+        """Modeled bytes of ONE quantized version delta: elements packed
+        at ``downlink_bits`` bits plus one f32 scale per chunk.  (The
+        in-memory ``QuantizedDelta`` keeps int8 — the packed size is the
+        wire model, mirrored in ``QuantizedDelta.wire_nbytes``.)"""
+        rows = self._rows(payload_bytes)
+        return float(rows * math.ceil(self.chunk * self.downlink_bits / 8) + rows * 4)
+
+    def downlink_wire_bytes(self, payload_bytes: float, chain: int | None = None) -> float:
+        """Modeled bytes of one broadcast (download) to one worker.
+
+        ``chain`` is the worker's version gap when it qualifies for the
+        delta path (``downlink="delta-qsgd"``, base cached, gap <=
+        ``chain_cap``) — ``chain=0`` is a version check with no payload,
+        ``chain=k`` ships k cached deltas.  ``chain=None`` means the
+        full path: the f32 state for ``delta-qsgd`` fallback (and for
+        ``downlink="none"``), the quantized full model for
+        ``downlink="qsgd-int8"`` (which never chains)."""
+        if self.downlink == "delta-qsgd" and chain is not None:
+            if int(chain) < 0:
+                raise ValueError(f"delta chain must be >= 0, got {chain!r}")
+            return float(chain) * self.delta_wire_bytes(payload_bytes)
+        if self.downlink == "qsgd-int8":
+            rows = self._rows(payload_bytes)
+            return float(rows * self.chunk + rows * 4)
+        return float(payload_bytes)
 
 
 def as_policy(value) -> CompressionPolicy | None:
@@ -165,6 +265,15 @@ def commit_key(policy: CompressionPolicy, app_idx: int, commit_seq: int):
     return jax.random.fold_in(jax.random.fold_in(base, int(app_idx)), int(commit_seq))
 
 
+def broadcast_key(policy: CompressionPolicy, app_idx: int, version: int):
+    """The per-broadcast rounding key: seed -> downlink lane -> app ->
+    model version.  Folding a fixed lane constant first decorrelates the
+    broadcast stream from the commit stream even when (app, version)
+    collides with some (app, seq)."""
+    base = jax.random.fold_in(jax.random.PRNGKey(int(policy.seed)), 0x0D0C)
+    return jax.random.fold_in(jax.random.fold_in(base, int(app_idx)), int(version))
+
+
 @dataclass(frozen=True)
 class QuantizedDelta:
     """One worker delta serialized for the wire: int8 lattice points +
@@ -173,7 +282,12 @@ class QuantizedDelta:
     ``q`` is (R, chunk) int8 (the flattened, zero-padded delta), ``scale``
     (R, 1) f32.  Dequantization is ``q * scale`` row-wise; padding
     elements quantize to exactly 0 (|0/scale + u| < 1 for u in [0, 1))
-    and are dropped by ``unflatten``."""
+    and are dropped by ``unflatten``.
+
+    ``wire_nbytes`` overrides the modeled wire size when the serialized
+    format is narrower than the in-memory int8 grid (bit-packed signsgd,
+    sparse topk, packed downlink deltas); ``None`` means the arrays ARE
+    the wire format (dense qsgd-int8)."""
 
     q: np.ndarray
     scale: np.ndarray
@@ -182,10 +296,13 @@ class QuantizedDelta:
     treedef: Any
     levels: int
     chunk: int
+    wire_nbytes: float | None = None
 
     @property
     def nbytes(self) -> float:
         """Serialized wire size (what ``CommitDelta`` accounts)."""
+        if self.wire_nbytes is not None:
+            return float(self.wire_nbytes)
         return float(self.q.nbytes + self.scale.nbytes)
 
     def unflatten(self, flat) -> Any:
@@ -206,27 +323,23 @@ class QuantizedDelta:
         return self.unflatten(flat.reshape(-1))
 
 
-def quantize_delta(delta, policy: CompressionPolicy, key=None) -> QuantizedDelta:
-    """Serialize an update pytree under ``policy`` (must be enabled).
-
-    Routes through the kernel wrapper (``kernels.ops.qsgd_quantize``:
-    Pallas on TPU, compiled ref off-TPU) when the chunking matches the
-    kernel's 256-lane row; any other ``chunk`` takes the pure-JAX path —
-    both are bit-identical given the same uniforms.  ``key=None`` falls
-    back to deterministic round-half-down (tests only; the commit path
-    always threads ``commit_key``)."""
-    if not policy.enabled:
-        raise ValueError("quantize_delta requires an enabled policy (kind != 'none')")
+def _flatten_grid(delta, chunk: int):
+    """Flatten a pytree onto the (rows, chunk) quantization grid."""
     leaves, treedef = jax.tree.flatten(delta)
     shapes = tuple(np.shape(l) for l in leaves)
     flat = jnp.concatenate(
         [jnp.ravel(l).astype(jnp.float32) for l in leaves]
     ) if leaves else jnp.zeros((0,), jnp.float32)
     n = int(flat.size)
-    chunk = int(policy.chunk)
     rows = max(1, math.ceil(n / chunk))
     padded = jnp.zeros((rows * chunk,), jnp.float32).at[:n].set(flat)
-    x2d = padded.reshape(rows, chunk)
+    return padded.reshape(rows, chunk), flat, n, shapes, treedef
+
+
+def _qsgd_grid(x2d, key, levels: int):
+    """QSGD-quantize one (rows, chunk) grid, kernel-routed when the
+    chunking matches the Pallas 256-lane row."""
+    rows, chunk = x2d.shape
     if key is None:
         rand = jnp.full((rows, chunk), 0.5, jnp.float32)
     else:
@@ -234,14 +347,120 @@ def quantize_delta(delta, policy: CompressionPolicy, key=None) -> QuantizedDelta
     if chunk == 256:
         from repro.kernels import ops as kops
 
-        q, s = kops.qsgd_quantize(x2d, rand, levels=int(policy.levels))
+        return kops.qsgd_quantize(x2d, rand, levels=levels)
+    return qsgd_quantize(x2d, levels=levels, rand=rand)
+
+
+def quantize_delta(delta, policy: CompressionPolicy, key=None) -> QuantizedDelta:
+    """Serialize an update pytree under ``policy`` (must be enabled).
+
+    qsgd-int8 routes through the kernel wrapper (``kernels.ops.
+    qsgd_quantize``: Pallas on TPU, compiled ref off-TPU) when the
+    chunking matches the kernel's 256-lane row; any other ``chunk``
+    takes the pure-JAX path — both are bit-identical given the same
+    uniforms.  signsgd stores signs on the same int8 grid with a masked
+    per-chunk mean-|x| scale (padding rows never dilute the mean); topk
+    zeroes everything below the global top-``topk_frac`` cut, then
+    QSGD-quantizes the survivors.  All three ride ``QuantizedDelta`` —
+    the same buffer, the same fused dequantize-in-aggregate apply path —
+    with ``wire_nbytes`` carrying the packed/sparse wire model where the
+    int8 grid overstates it.  ``key=None`` falls back to deterministic
+    round-half-down (tests only; the commit path always threads
+    ``commit_key``)."""
+    if not policy.enabled:
+        raise ValueError("quantize_delta requires an enabled policy (kind != 'none')")
+    chunk = int(policy.chunk)
+    x2d, flat, n, shapes, treedef = _flatten_grid(delta, chunk)
+    wire = None
+    if policy.kind == "signsgd":
+        rows = x2d.shape[0]
+        counts = np.clip(n - chunk * np.arange(rows), 1, chunk).astype(np.float32)
+        s = jnp.sum(jnp.abs(x2d), axis=-1, keepdims=True) / counts[:, None]
+        q = jnp.sign(x2d).astype(jnp.int8)
+        wire = policy.wire_bytes(4.0 * n)
+    elif policy.kind == "topk":
+        k = max(1, math.ceil(n * float(policy.topk_frac)))
+        if n > k:
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            sparse = jnp.zeros_like(flat).at[idx].set(flat[idx])
+            rows = x2d.shape[0]
+            x2d = jnp.zeros((rows * chunk,), jnp.float32).at[:n].set(sparse)
+            x2d = x2d.reshape(rows, chunk)
+        q, s = _qsgd_grid(x2d, key, int(policy.levels))
+        wire = policy.wire_bytes(4.0 * n)
     else:
-        q, s = qsgd_quantize(x2d, levels=int(policy.levels), rand=rand)
+        q, s = _qsgd_grid(x2d, key, int(policy.levels))
     return QuantizedDelta(
         q=np.asarray(q), scale=np.asarray(s), length=n, shapes=shapes,
         treedef=treedef, levels=int(policy.levels), chunk=chunk,
+        wire_nbytes=wire,
     )
 
 
 def dequantize_delta(qd: QuantizedDelta) -> Any:
     return qd.dequantize()
+
+
+# -- downlink: version deltas + fused chain application ------------------------
+
+
+def quantize_broadcast_delta(delta, policy: CompressionPolicy, key=None) -> QuantizedDelta:
+    """Serialize one version delta for the broadcast direction: QSGD on
+    the coarse ``downlink_levels`` lattice, ``wire_nbytes`` set to the
+    bit-packed size (``delta_wire_bytes``) the scheduler prices chained
+    downloads at."""
+    if not policy.downlink_enabled:
+        raise ValueError(
+            "quantize_broadcast_delta requires an enabled downlink (downlink != 'none')"
+        )
+    chunk = int(policy.chunk)
+    x2d, _, n, shapes, treedef = _flatten_grid(delta, chunk)
+    levels = int(policy.downlink_levels) if policy.downlink == "delta-qsgd" else int(policy.levels)
+    q, s = _qsgd_grid(x2d, key, levels)
+    wire = policy.downlink_wire_bytes(4.0 * n, chain=1)
+    return QuantizedDelta(
+        q=np.asarray(q), scale=np.asarray(s), length=n, shapes=shapes,
+        treedef=treedef, levels=levels, chunk=chunk, wire_nbytes=wire,
+    )
+
+
+def apply_delta_chain(params, deltas: list) -> Any:
+    """Fold a chain of quantized version deltas into ``params`` in ONE
+    fused dequantize-and-apply pass (``kernels.ops.
+    apply_quantized_broadcast``; pure-JAX for non-kernel chunkings).
+
+    The deltas are accumulated strictly in chain order, element-wise —
+    the same additions, in the same order, as applying them one version
+    at a time — so a stale worker folding its whole gap in one call
+    lands on the same reconstruction the master maintained
+    incrementally.  All deltas must share one (rows, chunk) grid (same
+    model, same policy)."""
+    if not deltas:
+        return params
+    qd0 = deltas[0]
+    rows, chunk = qd0.q.shape
+    leaves = jax.tree.leaves(params)
+    flat = np.concatenate(
+        [np.ravel(np.asarray(l)).astype(np.float32) for l in leaves]
+    ) if leaves else np.zeros((0,), np.float32)
+    if flat.size != qd0.length:
+        raise ValueError(
+            f"params have {flat.size} elements but the chain was built for {qd0.length}"
+        )
+    w2d = np.zeros((rows * chunk,), np.float32)
+    w2d[: flat.size] = flat
+    w2d = w2d.reshape(rows, chunk)
+    q = np.stack([d.q for d in deltas])          # (D, rows, chunk) int8
+    s = np.stack([d.scale for d in deltas])      # (D, rows, 1) f32
+    if chunk == 256:
+        from repro.kernels import ops as kops
+
+        out = np.asarray(kops.apply_quantized_broadcast(w2d, q, s))
+    else:
+        out = w2d
+        for d in range(q.shape[0]):
+            out = out + q[d].astype(np.float32) * s[d]
+    rebuilt = qd0.unflatten(out.reshape(-1))
+    return jax.tree.map(
+        lambda p, v: np.asarray(v, dtype=np.asarray(p).dtype), params, rebuilt
+    )

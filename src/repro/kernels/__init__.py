@@ -2,6 +2,7 @@
 
 tree_aggregate — weighted child-gradient reduction (aggregator inner loop)
 quantize      — QSGD int8 stochastic quantize/dequantize (cross-zone wire)
+broadcast     — fused dequantize-and-apply of broadcast delta chains
 policy_update — Algorithm 1 lines 5-8, batched over nodes
 fused_update  — fused SGD + FedProx proximal + weight decay
 

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused dequantize-and-apply for broadcast deltas.
+
+The compressed-downlink hot loop (docs/performance.md "compressed
+downlink"): a worker holding params ``w`` receives a chain of D
+quantized version deltas (int8 lattice points + per-chunk f32 scales)
+and folds them into its held state in ONE pass — no materialized f32
+delta, no per-version round trip.  The chain axis is accumulated
+strictly in order (a static unroll over D, which is <= the policy's
+``chain_cap``), element-wise identical to applying the deltas one
+version at a time, so chained reconstruction lands exactly on the
+master's incrementally-maintained reference state.
+
+Tiling matches ``quantize.py``: (ROWS_PER_BLOCK, 256) f32 blocks in
+VMEM with the full (small) chain axis resident per block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW = 256
+ROWS_PER_BLOCK = 256
+
+
+def _apply_kernel(w_ref, q_ref, s_ref, o_ref):
+    acc = w_ref[...].astype(jnp.float32)  # (RB, 256)
+    for d in range(q_ref.shape[0]):  # static unroll: D <= chain_cap
+        acc = acc + q_ref[d].astype(jnp.float32) * s_ref[d]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_quantized_broadcast(
+    w: jax.Array, q: jax.Array, s: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """w: (R, 256) f32; q: (D, R, 256) int8; s: (D, R, 1) f32 ->
+    (R, 256) f32 with the D deltas accumulated in chain order.
+    R % ROWS_PER_BLOCK == 0."""
+    R, W = w.shape
+    D = q.shape[0]
+    assert W == ROW and R % ROWS_PER_BLOCK == 0, (R, W)
+    assert q.shape == (D, R, ROW) and s.shape == (D, R, 1), (q.shape, s.shape)
+    grid = (R // ROWS_PER_BLOCK,)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_BLOCK, ROW), lambda i: (i, 0)),
+            pl.BlockSpec((D, ROWS_PER_BLOCK, ROW), lambda i: (0, i, 0)),
+            pl.BlockSpec((D, ROWS_PER_BLOCK, 1), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_PER_BLOCK, ROW), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, ROW), jnp.float32),
+        interpret=interpret,
+    )(w, q, s)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import broadcast as _bc
 from . import fused_update as _fu
 from . import policy_update as _pu
 from . import quantize as _q
@@ -253,6 +254,29 @@ def qsgd_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     sp, _ = _pad_to(scale, _q.ROWS_PER_BLOCK, axis=0)
     out = _q.qsgd_dequantize(qp, sp, interpret=_interpret())
     return out[: q.shape[0]]
+
+
+@jax.jit
+def _apply_quantized_jnp(w, q, s):
+    return _ref.apply_quantized_ref(w, q, s)
+
+
+def apply_quantized_broadcast(w: jax.Array, q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Fused dequantize-and-apply of a broadcast delta chain: (R, 256)
+    f32 held params + (D, R, 256) int8 lattice points * (D, R, 1) f32
+    per-chunk scales -> (R, 256) f32, the chain accumulated strictly in
+    order in one pass (docs/performance.md "compressed downlink").  Pads
+    rows to the block size; the chain axis D (<= ``chain_cap``) is a
+    static unroll, so distinct chain lengths compile O(chain_cap)
+    programs total."""
+    w, q, scale = jnp.asarray(w), jnp.asarray(q), jnp.asarray(scale)
+    if _use_jnp():
+        return _apply_quantized_jnp(w, q, scale)
+    wp, _ = _pad_to(w, _bc.ROWS_PER_BLOCK, axis=0)
+    qp, _ = _pad_to(q, _bc.ROWS_PER_BLOCK, axis=1)
+    sp, _ = _pad_to(scale, _bc.ROWS_PER_BLOCK, axis=1)
+    out = _bc.apply_quantized_broadcast(wp, qp, sp, interpret=_interpret())
+    return out[: w.shape[0]]
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "alpha", "beta"))

@@ -32,6 +32,21 @@ def dequantize_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
+def apply_quantized_ref(w: jax.Array, q: jax.Array, s: jax.Array) -> jax.Array:
+    """Fused dequantize-and-apply of a broadcast delta chain.
+
+    w: (R, C) f32; q: (D, R, C) int8; s: (D, R, 1) f32 -> (R, C) f32.
+    The chain axis D accumulates strictly in order (a static Python
+    unroll, same element-wise addition sequence as D successive
+    single-delta applies), so chained reconstruction matches the
+    incremental reference state.
+    """
+    acc = w.astype(jnp.float32)
+    for d in range(q.shape[0]):
+        acc = acc + q[d].astype(jnp.float32) * s[d]
+    return acc
+
+
 def policy_update_ref(
     pi: jax.Array,  # (N, K)
     mask: jax.Array,  # (N, K) bool

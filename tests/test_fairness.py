@@ -309,8 +309,10 @@ def test_transport_records_land_in_round_records():
     assert [f["uplink_bytes"] for f in sched.fairness_log] == bs
     stats = sched.transport_stats()
     assert set(stats) == {
-        "uplink_bytes", "uplink_mbps", "done_ms", "jain_uplink", "deferred_commits",
+        "uplink_bytes", "downlink_bytes", "uplink_mbps", "done_ms",
+        "jain_uplink", "deferred_commits",
     }
+    assert all(b > 0 for b in stats["downlink_bytes"])
 
 
 # -- liveness under churn (satellite regressions) -----------------------------

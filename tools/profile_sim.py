@@ -124,6 +124,15 @@ def main() -> None:
     print(f"events dispatched: {sched.events_dispatched} "
           f"({sched.events_dispatched / max(wall, 1e-9):.0f} events/s wall, "
           f"heap max {sched.heap_max}); peak RSS: {peak_mb:.0f} MB")
+    # per-app wire split (docs/performance.md "compressed downlink"):
+    # commit (uplink) vs broadcast (downlink) bytes as the scheduler
+    # priced them — compression policies show up directly here
+    ts = sched.transport_stats()
+    print("per-app wire bytes (up / down):")
+    for ai, (up, down) in enumerate(zip(ts["uplink_bytes"], ts["downlink_bytes"])):
+        print(f"  app {ai}: {up / 1e6:8.2f} MB up  /  {down / 1e6:8.2f} MB down")
+    print(f"  total: {sum(ts['uplink_bytes']) / 1e6:.2f} MB up / "
+          f"{sum(ts['downlink_bytes']) / 1e6:.2f} MB down")
     print(f"wrote {stats_path}")
     if not args.no_jax_trace:
         print(f"wrote jax trace under {trace_dir} (open with Perfetto or "
